@@ -1,0 +1,64 @@
+"""Render EXPERIMENTS.md tables from results/{dryrun,roofline}/*.json."""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted((ROOT / "results" / "dryrun").glob("*.json")):
+        if "__L" in f.stem or f.stem.count("__") > 2:
+            continue
+        r = json.loads(f.read_text())
+        rows.append(r)
+    out = ["| arch | shape | mesh | compile_s | args GiB | temp GiB | "
+           "collectives (counts) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        cc = ", ".join(f"{k.split('-')[0]}-{k.split('-')[1][0]}:{v}"
+                       if "-" in k else f"{k}:{v}"
+                       for k, v in sorted(
+                           r["collectives"]["counts"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']} | {r['memory']['args_GiB']:.2f} | "
+            f"{r['memory']['temp_GiB']:.2f} | {cc} |")
+    return "\n".join(out)
+
+
+def roofline_table(tag=None) -> str:
+    rows = []
+    for f in sorted((ROOT / "results" / "roofline").glob("*.json")):
+        parts = f.stem.split("__")
+        ftag = parts[2] if len(parts) > 2 else None
+        if ftag != tag:
+            continue
+        rows.append(json.loads(f.read_text()))
+    out = ["| arch | shape | compute_s | memory_s (kernelized) | "
+           "memory_s (raw) | collective_s | dominant | useful | roofline | "
+           "peak GiB | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r.get('memory_raw_s', r['memory_s']):.3f} | "
+            f"{r['collective_s']:.3f} | {r['dominant'].replace('_s','')} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} | "
+            f"{r['memory_peak_GiB']:.1f} | "
+            f"{'yes' if r.get('fits_hbm16') else 'NO'} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## Dry-run\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n## Roofline (single-pod 16x16)\n")
+        print(roofline_table())
+    if which in ("all", "opt"):
+        print("\n## Optimized cells\n")
+        print(roofline_table(tag="final_opt"))

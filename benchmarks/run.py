@@ -1,0 +1,60 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline table (our §Perf
+artifact) is appended from cached dry-run results when present.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def roofline_table():
+    res = pathlib.Path(__file__).resolve().parents[1] / "results" / "roofline"
+    rows = []
+    if not res.exists():
+        print("roofline,0,run `python -m benchmarks.roofline` first")
+        return rows
+    for f in sorted(res.glob("*.json")):
+        r = json.loads(f.read_text())
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"{name},{bound*1e6:.0f},"
+              f"dom={r['dominant']};useful={r['useful_ratio']};"
+              f"roof={r['roofline_fraction']};mem_GiB={r['memory_peak_GiB']}")
+        rows.append(r)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds / smaller sizes")
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    from benchmarks import figures
+    q = args.quick
+    jobs = {
+        "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
+        "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
+        "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),
+        "fig11": lambda: figures.fig11_topologies(rounds=4 if q else 8),
+        "tab12": lambda: figures.tab12_reproducibility(rounds=3 if q else 5),
+        "fig12": lambda: figures.fig12_scale(
+            rounds=2 if q else 3, sizes=(100, 250) if q else
+            (100, 250, 500, 1000)),
+        "roofline": roofline_table,
+    }
+    only = list(jobs) if args.only == "all" else args.only.split(",")
+    print("name,us_per_call,derived")
+    for name in only:
+        jobs[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Serving example: batched prefill + greedy decode of an FL-trained model.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch minicpm3-4b
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

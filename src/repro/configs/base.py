@@ -1,0 +1,258 @@
+"""Configuration dataclasses for models, shapes, meshes and FL jobs.
+
+Every assigned architecture gets a module ``src/repro/configs/<id>.py`` exposing
+``CONFIG: ModelConfig``. ``registry.get(name)`` resolves them. The paper's own
+models (3-conv CNN, 4-hidden MLP, logistic regression) live in ``flsim_small.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek/MiniCPM3 style)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    # Layers with ``layer_idx % moe_every == moe_offset`` use MoE (rest dense MLP).
+    moe_every: int = 1
+    moe_offset: int = 0
+    # Arctic: a dense FFN residual branch runs in parallel with the MoE branch.
+    dense_residual_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+    # Expert-parallel layout: "model" = experts sharded over the model axis,
+    # full expert FFN per chip (small experts, e.g. qwen3); "grid" = experts
+    # over data x expert-FFN over model with ring-chunked compute (experts too
+    # big for one chip's slice budget: jamba); "subgrid" = experts x f_sub
+    # FFN-slices packed onto the flattened (data x model) grid with butterfly
+    # partial-sums (arctic post-hillclimb; needs E*f_sub == n_chips).
+    # See DESIGN.md, models/moe.py and EXPERIMENTS.md §Perf.
+    ep_mode: str = "model"
+    f_sub: int = 1
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba"           # "mamba" | "xlstm"
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 -> d_model // 16
+    chunk: int = 256              # chunked-scan block size
+    # xlstm: one sLSTM block per ``slstm_every`` blocks, rest mLSTM.
+    slstm_every: int = 4
+    proj_factor: float = 2.0      # xlstm up-projection
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Jamba-style periodic layout."""
+    period: int = 8
+    attn_index: int = 4           # which layer inside the period is attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | encdec | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_type: str = "gqa"        # gqa | mla
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # encoder-decoder only
+    n_enc_layers: int = 0
+    dec_len_ratio: int = 8        # decoder length = seq_len // ratio
+    # modality frontend is a stub; "token" (ids) or "frames" (precomputed embeds)
+    input_kind: str = "token"
+    notes: str = ""
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so it shards over any mesh axis."""
+        v, m = self.vocab_size, 256
+        return (v + m - 1) // m * m
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    # Parameter counting (used by tests and MODEL_FLOPS=6ND roofline term)
+    # ------------------------------------------------------------------
+    def param_count(self, padded: bool = False) -> int:
+        from repro.models.model_zoo import count_params
+        return count_params(self, padded=padded)
+
+    def active_param_count(self, padded: bool = False) -> int:
+        from repro.models.model_zoo import count_params
+        return count_params(self, padded=padded, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+# Archs with sub-quadratic token mixing run long_500k; pure full-attention archs
+# skip it (assignment rule; see DESIGN.md §Arch-applicability).
+SUBQUADRATIC = ("xlstm-125m", "jamba-1.5-large-398b")
+
+
+def shapes_for(arch: str) -> Sequence[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in SUBQUADRATIC:
+        names.append("long_500k")
+    return tuple(names)
+
+
+# ---------------------------------------------------------------------------
+# FL job configuration (mirrors paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FLConfig:
+    strategy: str = "fedavg"          # core strategy name
+    topology: str = "client_server"   # client_server | hierarchical | decentralized
+    placement: str = "auto"           # spatial | temporal | auto
+    n_clients: int = 16               # virtual clients (cohort per round)
+    cohort: int = 0                   # 0 -> all clients each round
+    local_epochs: int = 1
+    local_steps: int = 1              # local optimizer steps per epoch
+    client_lr: float = 0.1
+    client_optimizer: str = "sgd"     # sgd | sgdm | adam
+    client_momentum: float = 0.0
+    server_lr: float = 1.0
+    server_optimizer: str = "none"    # none | momentum | adam | yogi
+    server_momentum: float = 0.9
+    # strategy extras
+    prox_mu: float = 0.0              # FedProx
+    dp_clip: float = 0.0              # DP-FedAvg
+    dp_noise: float = 0.0
+    moon_mu: float = 0.0              # MOON contrastive weight
+    moon_tau: float = 0.5
+    compression: str = "none"         # none | int8 | topk
+    topk_ratio: float = 0.01
+    error_feedback: bool = True
+    # multi-worker consensus
+    n_workers: int = 1
+    consensus: str = "majority_digest"
+    byzantine_workers: int = 0
+    # decentralized
+    gossip_steps: int = 1
+    # data
+    partition: str = "dirichlet"      # dirichlet | iid | shards
+    dirichlet_alpha: float = 0.5
+    seed: int = 0
+    deterministic: bool = True
+    # runtime / fault-tolerance
+    straggler_overprovision: float = 1.0
+    drop_tolerance: float = 0.0       # fraction of clients allowed to drop per round
+    checkpoint_every: int = 0
+    blockchain: str = "none"          # none | hashchain
+    rounds: int = 10
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    data: int = 16
+    model: int = 16
+    pods: int = 2
+
+    @property
+    def shape(self):
+        return (self.pods, self.data, self.model) if self.multi_pod else (self.data, self.model)
+
+    @property
+    def axes(self):
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def n_chips(self) -> int:
+        n = self.data * self.model
+        return n * self.pods if self.multi_pod else n
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCHS = (
+    "minicpm3-4b",
+    "qwen2.5-32b",
+    "yi-34b",
+    "qwen1.5-32b",
+    "whisper-base",
+    "qwen3-moe-30b-a3b",
+    "arctic-480b",
+    "chameleon-34b",
+    "xlstm-125m",
+    "jamba-1.5-large-398b",
+)
+
+_SMALL = ("flsim-cnn", "flsim-mlp", "flsim-logreg")
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+_MODULE_FOR.update({a: "flsim_small" for a in _SMALL})
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[name]}")
+    if name in _SMALL:
+        return getattr(mod, name.replace("-", "_").upper())
+    return mod.CONFIG
+
+
+def list_archs() -> Sequence[str]:
+    return ARCHS

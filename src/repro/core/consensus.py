@@ -1,0 +1,100 @@
+"""Multi-worker aggregation consensus (paper §2.5, RQ3, Fig. 10).
+
+Several workers each produce an aggregate; a consensus callable picks the
+next global model. Mirrors the paper's 4-phase pipeline:
+  (1) local parameter sharing  (2) aggregated-parameter voting
+  (3) final global parameter   (4) distribution.
+
+Runs in-graph: W is small, aggregates are stacked on a leading worker dim.
+Digest voting uses a deterministic random-projection fingerprint (the host
+ledger keeps exact SHA256, see blockchain.py). Byzantine workers are
+simulated via a poison transform.
+
+The consensus callable signature matches the paper's Fig. 5:
+  consensus(aggregated_models: (W, ...), extra: dict) -> chosen model
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def digest(tree, n_proj: int = 4) -> jnp.ndarray:
+    """Deterministic fingerprint: projections of the flattened pytree."""
+    acc = jnp.zeros((n_proj,), jnp.float32)
+    for i, leaf in enumerate(jax.tree.leaves(tree)):
+        f = leaf.astype(jnp.float32).reshape(-1)
+        key = jax.random.PRNGKey(i)
+        proj = jax.random.normal(key, (n_proj, min(f.shape[0], 128)))
+        acc = acc + proj @ f[: min(f.shape[0], 128)]
+    return acc
+
+
+def majority_digest(aggs, extra):
+    """Pick the aggregate whose (quantized) digest has the most matches —
+    honest majority nullifies minority poisoners (Chowdhury et al. [13])."""
+    W = jax.tree.leaves(aggs)[0].shape[0]
+    digs = jnp.stack([digest(jax.tree.map(lambda t: t[w], aggs))
+                      for w in range(W)])                      # (W, P)
+    q = jnp.round(digs * 1e4) / 1e4
+    same = (jnp.abs(q[:, None] - q[None, :]) < 1e-3).all(-1)   # (W, W)
+    votes = same.sum(-1)
+    winner = jnp.argmax(votes)
+    return jax.tree.map(lambda t: t[winner], aggs)
+
+
+def median_select(aggs, extra):
+    """Coordinate-wise median across workers (robust aggregation)."""
+    return jax.tree.map(lambda t: jnp.median(t, axis=0), aggs)
+
+
+def trimmed_mean(aggs, extra):
+    trim = int(extra.get("trim", 1))
+    def f(t):
+        s = jnp.sort(t, axis=0)
+        W = t.shape[0]
+        return s[trim:W - trim].mean(0) if W > 2 * trim else t.mean(0)
+    return jax.tree.map(f, aggs)
+
+
+CONSENSUS_REGISTRY: dict[str, Callable] = {
+    "majority_digest": majority_digest,
+    "median": median_select,
+    "trimmed_mean": trimmed_mean,
+}
+
+
+def poison(tree, scale: float = 10.0, rng=None):
+    """Model-poisoning transform for byzantine-worker simulation."""
+    rng = jax.random.PRNGKey(666) if rng is None else rng
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        l + scale * jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype)
+        for l, k in zip(leaves, keys)])
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiWorkerAggregator:
+    """Wraps a base aggregate with W redundant workers + consensus."""
+    n_workers: int
+    byzantine: int
+    consensus: str = "majority_digest"
+    poison_scale: float = 3.0
+
+    def run(self, agg_delta, rng):
+        """agg_delta: the honest aggregate (all workers see the same client
+        deltas). Byzantine workers poison theirs; consensus picks one."""
+        fn = CONSENSUS_REGISTRY[self.consensus]
+        versions = []
+        for w in range(self.n_workers):
+            if w < self.byzantine:
+                versions.append(poison(agg_delta, self.poison_scale,
+                                       jax.random.fold_in(rng, w)))
+            else:
+                versions.append(agg_delta)
+        stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *versions)
+        return fn(stacked, {})

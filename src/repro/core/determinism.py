@@ -1,0 +1,26 @@
+"""Seed synchronization (paper RQ6).
+
+FLsim synchronizes node seeds via env vars + per-library deterministic modes.
+In JAX determinism is structural: one root key, `fold_in` chains keyed by
+(round, client, step). Bitwise reproducibility is asserted by
+tests/test_determinism.py and benchmarks/tab12_reproducibility.py.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def root_key(seed: int) -> jax.Array:
+    return jax.random.PRNGKey(seed)
+
+
+def round_key(key, round_idx) -> jax.Array:
+    return jax.random.fold_in(key, round_idx)
+
+
+def client_key(key, client_id) -> jax.Array:
+    return jax.random.fold_in(jax.random.fold_in(key, 0x11C), client_id)
+
+
+def step_key(key, step) -> jax.Array:
+    return jax.random.fold_in(jax.random.fold_in(key, 0x57E), step)

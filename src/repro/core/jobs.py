@@ -1,0 +1,95 @@
+"""Job configuration loader (paper Fig. 2).
+
+A job YAML mirrors the paper's six sections: dataset, consensus, clusters,
+strategy, node defaults, node configs. ``load_job`` turns it into the typed
+configs the rest of the system consumes; ``scaffold`` is the Job
+Orchestrator entry (paper component 1): it resolves the model, strategy,
+topology, dataset pipeline and fault model from one file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Any, Optional
+
+import yaml
+
+from repro.configs.base import FLConfig, get_config
+from repro.core.strategies import get_strategy
+from repro.core.topology import get_topology
+from repro.core.blockchain import get_ledger
+from repro.data.pipeline import SyntheticLM, SyntheticVision
+from repro.models import model_zoo
+from repro.runtime.faults import FaultModel
+
+
+@dataclasses.dataclass
+class Job:
+    name: str
+    fl: FLConfig
+    arch: str
+    model: Any
+    strategy: Any
+    topology: Any
+    dataset: Any
+    ledger: Any
+    fault: FaultModel
+    raw: dict
+
+
+_FL_KEYS = {f.name for f in dataclasses.fields(FLConfig)}
+
+
+def load_job(path_or_dict) -> Job:
+    if isinstance(path_or_dict, (str, pathlib.Path)):
+        raw = yaml.safe_load(pathlib.Path(path_or_dict).read_text())
+    else:
+        raw = dict(path_or_dict)
+
+    strat = raw.get("strategy", {})
+    ds = raw.get("dataset", {})
+    cons = raw.get("consensus", {})
+    flkw = {}
+    for section in (strat.get("train_params", {}),
+                    strat.get("aggregator_params", {}),
+                    cons, ds.get("distribution", {}),
+                    raw.get("runtime", {})):
+        for k, v in (section or {}).items():
+            if k in _FL_KEYS:
+                flkw[k] = v
+    if "strategy" in strat:
+        flkw["strategy"] = strat["strategy"]
+    fl = FLConfig(**flkw)
+
+    arch = raw.get("model", {}).get("arch", "flsim-cnn")
+    reduced = raw.get("model", {}).get("reduced", False)
+    cfg = get_config(arch)
+    if reduced:
+        from repro.configs.reduce import reduced_config
+        cfg = reduced_config(cfg)
+    model = model_zoo.build(cfg)
+
+    kind = ds.get("dataset", "synthetic_vision")
+    if kind == "synthetic_vision":
+        dataset = SyntheticVision(n_items=ds.get("n_items", 1024),
+                                  seed=fl.seed)
+    elif kind == "synthetic_lm":
+        dataset = SyntheticLM(vocab=cfg.padded_vocab
+                              if cfg.family != "small" else 512, seed=fl.seed)
+    else:
+        raise KeyError(f"unknown dataset {kind!r}")
+
+    rt = raw.get("runtime", {})
+    fault = FaultModel(drop_prob=rt.get("drop_prob", 0.0),
+                       straggler_prob=rt.get("straggler_prob", 0.0),
+                       seed=fl.seed)
+    return Job(
+        name=raw.get("name", "job"),
+        fl=fl, arch=arch, model=model,
+        strategy=get_strategy(fl),
+        topology=get_topology(fl.topology, fl.gossip_steps),
+        dataset=dataset,
+        ledger=get_ledger(fl.blockchain),
+        fault=fault,
+        raw=raw,
+    )

@@ -1,0 +1,50 @@
+"""Key-value store / pub-sub broker (paper component 5).
+
+On the paper's CPU cluster this brokers parameter exchange between node
+processes. On the TPU mesh parameter movement is compiled collectives — but
+the host-level orchestration (launch/train.py) still needs a broker for
+*control-plane* state: round metadata, node stages (Alg. 1), straggler
+deadlines, checkpoint manifests. This in-process implementation keeps the
+same publish/subscribe surface a distributed deployment (e.g. Redis) would.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Callable
+
+
+class KVStore:
+    def __init__(self):
+        self._data: dict[str, Any] = {}
+        self._subs: dict[str, list[Callable]] = collections.defaultdict(list)
+        self._lock = threading.Lock()
+
+    def publish(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+            subs = list(self._subs.get(key, ()))
+        for fn in subs:
+            fn(key, value)
+
+    def get(self, key: str, default=None) -> Any:
+        with self._lock:
+            return self._data.get(key, default)
+
+    def subscribe(self, key: str, fn: Callable) -> None:
+        with self._lock:
+            self._subs[key].append(fn)
+
+    def keys(self, prefix: str = "") -> list:
+        with self._lock:
+            return [k for k in self._data if k.startswith(prefix)]
+
+    # -- Alg. 1 signal helpers -----------------------------------------
+    def set_process_phase(self, phase: int) -> None:
+        self.publish("process_phase", phase)
+
+    def set_node_stage(self, node: str, stage: int) -> None:
+        self.publish(f"node_stage/{node}", stage)
+
+    def all_nodes_in_stage(self, nodes, stage: int) -> bool:
+        return all(self.get(f"node_stage/{n}") == stage for n in nodes)

@@ -1,0 +1,267 @@
+"""FL rounds as single compiled programs (the TPU rendering of Alg. 1).
+
+Two client placements (DESIGN.md):
+
+- ``spatial``  — each point of the flattened client grid (data x model [x pod])
+  hosts one or more whole clients; local epochs run truly in parallel under
+  shard_map (vmap over the per-chip client dim), aggregation is a weighted
+  psum / gossip ppermute per the topology. The model itself runs *unsharded*
+  inside each client (AxisCtx() is passed down).
+
+- ``temporal`` — one client at a time uses the entire mesh (ZeRO-3 + SP
+  sharding from sharding/specs.py); the cohort is a lax.scan, deltas are
+  accumulated with client weights, then the server update runs. With
+  cohort=1 and E=1 a round is mathematically one data-parallel step +
+  server optimizer — that identity is a unit test.
+
+Both paths run meshless (AxisCtx()) for CPU-scale tests and benches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core import determinism
+from repro.core.consensus import MultiWorkerAggregator
+from repro.core.strategy import (Strategy, client_sgd_step, tree_add,
+                                 tree_scale, tree_sub, tree_zeros_like)
+from repro.core.topology import Decentralized, get_topology
+from repro.sharding.axes import AxisCtx
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Per-client local training (pure; no cross-client communication)
+# ---------------------------------------------------------------------------
+
+def local_train(model, model_ctx: AxisCtx, strategy: Strategy, fl: FLConfig,
+                global_params, server_state, client_state, batches, rng,
+                gather_fn=lambda b: b, grad_sync=lambda g: g):
+    """Run E local epochs over ``batches`` (leading dim = steps).
+
+    Returns (delta, new_client_state, mean_loss)."""
+    n_steps = jax.tree.leaves(batches)[0].shape[0]
+    use_mom = fl.client_optimizer == "sgdm" and fl.client_momentum > 0
+    mom0 = tree_zeros_like(global_params) if use_mom else None
+
+    def base_loss(p, b, key):
+        return model.loss(model_ctx, p, b, gather_fn)
+
+    if fl.local_epochs * n_steps == 1 and not use_mom:
+        # Fast path: one local SGD step => delta == -lr * grad. Elides the
+        # params' copy + subtraction buffers (matters at 400B scale).
+        batch = jax.tree.map(lambda t: t[0], batches)
+        key = determinism.step_key(rng, 0)
+
+        def lfn(p):
+            return strategy.local_loss(base_loss, p, global_params, batch,
+                                       client_state, key)
+
+        (loss, _), grads = jax.value_and_grad(lfn, has_aux=True)(global_params)
+        grads = grad_sync(grads)
+        grads = strategy.grad_transform(grads, client_state, server_state)
+        delta = jax.tree.map(
+            lambda p, g: (-fl.client_lr * g).astype(p.dtype),
+            global_params, grads)
+        delta, client_state = strategy.postprocess(delta, client_state, rng)
+        client_state = strategy.client_state_update(
+            client_state, server_state, delta, 1, fl.client_lr)
+        return delta, client_state, loss
+
+    def one_step(carry, xs):
+        params, mom = carry
+        step_idx, key = xs
+        batch = jax.tree.map(lambda t: t[step_idx % n_steps], batches)
+
+        def lfn(p):
+            return strategy.local_loss(base_loss, p, global_params, batch,
+                                       client_state, key)
+
+        (loss, _), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+        grads = grad_sync(grads)
+        grads = strategy.grad_transform(grads, client_state, server_state)
+        params, new_mom = client_sgd_step(params, grads, fl.client_lr, mom,
+                                          fl.client_momentum)
+        return (params, new_mom), loss
+
+    total = fl.local_epochs * n_steps
+    keys = jax.vmap(lambda i: determinism.step_key(rng, i))(jnp.arange(total))
+    (params, _), losses = jax.lax.scan(
+        one_step, (global_params, mom0), (jnp.arange(total), keys))
+    delta = tree_sub(params, global_params)
+    delta, client_state = strategy.postprocess(delta, client_state, rng)
+    client_state = strategy.client_state_update(
+        client_state, server_state, delta, total, fl.client_lr)
+    return delta, client_state, losses.mean()
+
+
+# ---------------------------------------------------------------------------
+# Spatial round
+# ---------------------------------------------------------------------------
+
+def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
+    """Returns round_fn(ctx, state, batch, weights, rng) -> (state, metrics).
+
+    state: {"params", "server", "clients"}; for decentralized topology
+    ``params`` carries the per-client leading dim (diverged models)."""
+    topo = get_topology(fl.topology, fl.gossip_steps)
+    decentralized = isinstance(topo, Decentralized)
+    mw = (MultiWorkerAggregator(fl.n_workers, fl.byzantine_workers,
+                                fl.consensus)
+          if (fl.n_workers > 1 or fl.byzantine_workers > 0) else None)
+    inner = AxisCtx()   # the model runs unsharded inside each client
+
+    def round_fn(ctx: AxisCtx, state, batch, weights, rng):
+        """batch: (C_loc, steps, B_c, ...); weights: (C_loc,)."""
+        params = state["params"]
+        server_state = state["server"]
+        C_loc = jax.tree.leaves(batch)[0].shape[0]
+        chip = ctx.index(ctx.model)
+        for axis in (ctx.data, ctx.pod):
+            if axis is not None:
+                chip = chip * 0 + ctx.index(axis) * _grid_below(ctx, axis) + chip
+        client_ids = chip * C_loc + jnp.arange(C_loc)
+        keys = jax.vmap(lambda c: determinism.client_key(rng, c))(client_ids)
+
+        def per_client(cbatch, cstate, key, start_params):
+            return local_train(model, inner, strategy, fl, start_params,
+                               server_state, cstate, cbatch, key)
+
+        if decentralized:
+            deltas, cstates, losses = jax.vmap(per_client)(
+                batch, state["clients"], keys, params)
+            updated = tree_add(params, deltas)
+            mixed = topo.mix(ctx, updated)
+            new_params = mixed
+            new_server = server_state
+        else:
+            deltas, cstates, losses = jax.vmap(
+                per_client, in_axes=(0, 0, 0, None))(
+                batch, state["clients"], keys, params)
+            agg = topo.aggregate(ctx, deltas, weights)
+            if mw is not None:
+                agg = mw.run(agg, rng)
+            agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
+            new_params, new_server = strategy.server_update(
+                params, agg, server_state)
+            # SCAFFOLD: the server control variate is the cohort mean of the
+            # client variates (communicated alongside the deltas, per the
+            # paper's "additional states" requirement (5)).
+            if isinstance(new_server, dict) and "c" in new_server \
+                    and isinstance(cstates, dict) and "c_i" in cstates:
+                new_server = dict(new_server,
+                                  c=topo.aggregate(ctx, cstates["c_i"],
+                                                   weights))
+        loss = losses.mean()
+        axes = tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a)
+        if axes:
+            loss = jax.lax.pmean(loss, axes)
+        new_state = {"params": new_params, "server": new_server,
+                     "clients": cstates}
+        return new_state, {"loss": loss}
+
+    return round_fn
+
+
+def _grid_below(ctx: AxisCtx, axis: str) -> int:
+    """Flattened grid stride for client-id computation."""
+    if axis == ctx.data:
+        return ctx.size(ctx.model)
+    if axis == ctx.pod:
+        return ctx.size(ctx.model) * ctx.size(ctx.data)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Temporal round
+# ---------------------------------------------------------------------------
+
+def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
+                         cfg: ModelConfig):
+    """Returns round_fn(ctx, state, batch, weights, rng) -> (state, metrics).
+
+    batch: (C_t, steps, B_loc, ...) — cohort clients scanned in time, each
+    using the whole mesh. For C_t == 1 the delta buffer is elided."""
+    from repro.sharding import specs as sspecs
+    topo = get_topology(fl.topology, fl.gossip_steps)
+    mw = (MultiWorkerAggregator(fl.n_workers, fl.byzantine_workers,
+                                fl.consensus)
+          if (fl.n_workers > 1 or fl.byzantine_workers > 0) else None)
+
+    def round_fn(ctx: AxisCtx, state, batch, weights, rng):
+        params = state["params"]
+        server_state = state["server"]
+        gather_fn = sspecs.make_gather_fn(cfg, ctx)
+        grad_sync = sspecs.make_grad_sync(cfg, ctx)
+        C_t = jax.tree.leaves(batch)[0].shape[0]
+
+        def client(i, carry):
+            acc, loss_acc = carry
+            cbatch = jax.tree.map(lambda t: t[i], batch)
+            key = determinism.client_key(rng, i)
+            delta, _, loss = local_train(
+                model, ctx, strategy, fl, params, server_state, (),
+                cbatch, key, gather_fn, grad_sync)
+            w = weights[i]
+            acc = tree_add(acc, tree_scale(delta, w / weights.sum()))
+            return acc, loss_acc + loss / C_t
+
+        if C_t == 1:
+            cbatch = jax.tree.map(lambda t: t[0], batch)
+            key = determinism.client_key(rng, 0)
+            agg, _, loss = local_train(
+                model, ctx, strategy, fl, params, server_state, (),
+                cbatch, key, gather_fn, grad_sync)
+        else:
+            acc0 = tree_zeros_like(params)
+            agg, loss = jax.lax.fori_loop(
+                0, C_t, lambda i, c: client(i, c), (acc0, 0.0))
+
+        # hierarchical/cross-pod tier: average edge aggregates over pods
+        if ctx.pod is not None:
+            agg = jax.tree.map(lambda t: jax.lax.pmean(t, ctx.pod), agg)
+        if mw is not None:
+            agg = mw.run(agg, rng)
+        new_params, new_server = strategy.server_update(params, agg,
+                                                        server_state)
+        new_state = {"params": new_params, "server": new_server,
+                     "clients": state.get("clients", ())}
+        axes = tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a)
+        if axes:
+            loss = jax.lax.pmean(loss, axes)
+        return new_state, {"loss": loss}
+
+    return round_fn
+
+
+def init_state(model, strategy: Strategy, fl: FLConfig, key,
+               n_clients_local: int = 1, dtype=jnp.float32,
+               decentralized: bool = False):
+    """Initial FL state (meshless path; sharded init goes via launch/)."""
+    params = model.init(key, dtype)
+    if decentralized:
+        params = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (n_clients_local,) + t.shape),
+            params)
+    cstate = strategy.client_state_init(
+        model.init(key, dtype)) if _has_client_state(strategy) else ()
+    if _has_client_state(strategy):
+        cstate = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (n_clients_local,) + t.shape),
+            cstate)
+    return {
+        "params": params,
+        "server": strategy.server_state_init(params),
+        "clients": cstate,
+    }
+
+
+def _has_client_state(strategy) -> bool:
+    probe = strategy.client_state_init({"x": jnp.zeros(())})
+    return bool(jax.tree.leaves(probe))

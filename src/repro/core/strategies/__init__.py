@@ -1,0 +1,34 @@
+"""Strategy registry — the seven paper frameworks (Fig. 8) and extras."""
+from __future__ import annotations
+
+from repro.configs.base import FLConfig
+from repro.core.strategy import Strategy
+from repro.core.strategies.fedavgm import FedAvgM, FedAdam, FedYogi
+from repro.core.strategies.fedprox import FedProx
+from repro.core.strategies.scaffold import Scaffold
+from repro.core.strategies.moon import Moon
+from repro.core.strategies.dp import DPFedAvg
+from repro.core.strategies.compressed import CompressedFedAvg
+
+REGISTRY = {
+    "fedavg": lambda fl: Strategy(fl, "fedavg"),
+    "fedavgm": FedAvgM,
+    "fedadam": FedAdam,
+    "fedyogi": FedYogi,
+    "fedprox": FedProx,
+    "scaffold": Scaffold,
+    "moon": Moon,
+    "dp_fedavg": DPFedAvg,
+    "compressed": CompressedFedAvg,
+    # clustered & decentralized (fedstellar-style) are topology-level:
+    # clustered -> topology="hierarchical", decentralized -> "decentralized"
+    # with plain fedavg local logic.
+    "clustered": lambda fl: Strategy(fl, "clustered"),
+    "gossip": lambda fl: Strategy(fl, "gossip"),
+}
+
+
+def get_strategy(fl: FLConfig) -> Strategy:
+    if fl.strategy not in REGISTRY:
+        raise KeyError(f"unknown strategy {fl.strategy!r}: {sorted(REGISTRY)}")
+    return REGISTRY[fl.strategy](fl)

@@ -1,0 +1,56 @@
+"""Communication-efficient FL (paper refs [15,16]): int8 / top-k delta
+compression with error feedback. The quantize-dequantize round trip models
+exactly what crosses the network; aggregation of int8 deltas is the
+``quant_aggregate`` Pallas kernel's job on TPU."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import Strategy
+from repro.kernels import ref as kref
+
+
+def _roundtrip_int8(x, block=256):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    fp = jnp.pad(flat, (0, pad))
+    q, sc = kref.quantize_blockwise_ref(fp.astype(jnp.float32), block=block)
+    deq = (q.astype(jnp.float32).reshape(-1, block) * sc[:, None]).reshape(-1)
+    return deq[:flat.shape[0]].reshape(x.shape).astype(x.dtype)
+
+
+def _topk_mask(x, ratio):
+    flat = jnp.abs(x.astype(jnp.float32)).reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh.astype(x.dtype)).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedFedAvg(Strategy):
+    name: str = "compressed"
+
+    def client_state_init(self, params):
+        if self.fl.error_feedback:
+            return {"residual": jax.tree.map(jnp.zeros_like, params)}
+        return {}
+
+    def postprocess(self, delta, client_state, rng):
+        ef = self.fl.error_feedback and "residual" in (client_state or {})
+        if ef:
+            delta = jax.tree.map(lambda d, r: d + r.astype(d.dtype),
+                                 delta, client_state["residual"])
+        if self.fl.compression == "int8":
+            sent = jax.tree.map(_roundtrip_int8, delta)
+        elif self.fl.compression == "topk":
+            sent = jax.tree.map(
+                lambda d: d * _topk_mask(d, self.fl.topk_ratio), delta)
+        else:
+            sent = delta
+        if ef:
+            new_res = jax.tree.map(lambda d, s: d - s, delta, sent)
+            return sent, {"residual": new_res}
+        return sent, client_state

@@ -1,0 +1,27 @@
+"""Client-level differential privacy (Geyer et al.): clip + Gaussian noise."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import Strategy, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class DPFedAvg(Strategy):
+    name: str = "dp_fedavg"
+
+    def postprocess(self, delta, client_state, rng):
+        clip = self.fl.dp_clip
+        sigma = self.fl.dp_noise
+        nrm = global_norm(delta)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+        leaves, treedef = jax.tree.flatten(delta)
+        keys = jax.random.split(rng, len(leaves))
+        noised = [
+            (l * scale + sigma * clip *
+             jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype))
+            for l, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, noised), client_state

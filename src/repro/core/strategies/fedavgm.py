@@ -1,0 +1,60 @@
+"""Server-side optimizers: FedAvgM (Hsu et al.), FedAdam / FedYogi (Reddi)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import Strategy, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgM(Strategy):
+    name: str = "fedavgm"
+
+    def server_state_init(self, params):
+        return {"momentum": tree_zeros_like(params)}
+
+    def server_update(self, params, agg_delta, server_state):
+        beta = self.fl.server_momentum
+        m = jax.tree.map(lambda m, d: beta * m + d.astype(m.dtype),
+                         server_state["momentum"], agg_delta)
+        new = jax.tree.map(lambda p, mm: p + self.fl.server_lr * mm.astype(p.dtype),
+                           params, m)
+        return new, {"momentum": m}
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAdam(Strategy):
+    name: str = "fedadam"
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-3
+
+    def server_state_init(self, params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def _second_moment(self, v, d):
+        return self.b2 * v + (1 - self.b2) * d * d
+
+    def server_update(self, params, agg_delta, server_state):
+        t = server_state["t"] + 1
+        m = jax.tree.map(lambda m, d: self.b1 * m + (1 - self.b1) * d,
+                         server_state["m"], agg_delta)
+        v = jax.tree.map(self._second_moment, server_state["v"], agg_delta)
+        new = jax.tree.map(
+            lambda p, mm, vv: p + (self.fl.server_lr * mm /
+                                   (jnp.sqrt(vv) + self.eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+
+@dataclasses.dataclass(frozen=True)
+class FedYogi(FedAdam):
+    name: str = "fedyogi"
+
+    def _second_moment(self, v, d):
+        d2 = d * d
+        return v - (1 - self.b2) * d2 * jnp.sign(v - d2)

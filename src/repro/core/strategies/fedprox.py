@@ -1,0 +1,23 @@
+"""FedProx (Li et al.): proximal term against the global model."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import Strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class FedProx(Strategy):
+    name: str = "fedprox"
+
+    def local_loss(self, base_loss, params, global_params, batch,
+                   client_state, rng):
+        loss, metrics = base_loss(params, batch, rng)
+        mu = self.fl.prox_mu
+        prox = sum(jnp.sum(jnp.square((p - g).astype(jnp.float32)))
+                   for p, g in zip(jax.tree.leaves(params),
+                                   jax.tree.leaves(global_params)))
+        return loss + 0.5 * mu * prox, metrics

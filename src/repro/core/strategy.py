@@ -1,0 +1,105 @@
+"""FL Strategy base — the JAX rendering of FLsim's ``LearnStrategyBase``.
+
+The paper's strategy class bundles train() / aggregate() / test() plus local
+state. Here a Strategy is a set of *pure hooks* over generic pytrees, so one
+strategy definition works for a 3-layer CNN and a 480B MoE alike (the paper's
+"library agnosticism" recast as model/pytree agnosticism):
+
+  local_loss       — decorate the base loss (FedProx proximal term, MOON ...)
+  grad_transform   — adjust the local gradient (SCAFFOLD control variates)
+  postprocess      — transform the client delta before aggregation (DP, int8)
+  aggregate_update — turn the aggregated delta + server state into new params
+  *_state_init     — per-client / server state (momenta, control variates)
+
+Hooks run inside jit (spatial: under shard_map+vmap; temporal: inside the
+cohort scan), so they must be jax-pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+
+PyTree = Any
+
+
+def tree_zeros_like(t):
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def tree_add(a, b, scale=1.0):
+    return jax.tree.map(lambda x, y: x + scale * y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def global_norm(t):
+    # +tiny keeps the sqrt differentiable at exactly-zero trees (MOON's
+    # first-round prev-drift; otherwise grad(sqrt)(0) = nan)
+    return jnp.sqrt(1e-24 + sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                                for x in jax.tree.leaves(t)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """FedAvg — weighted parameter averaging (McMahan et al.). Base class."""
+    fl: FLConfig
+    name: str = "fedavg"
+
+    # -- state ---------------------------------------------------------
+    def server_state_init(self, params) -> PyTree:
+        return ()
+
+    def client_state_init(self, params) -> PyTree:
+        return ()
+
+    # -- local training hooks -------------------------------------------
+    def local_loss(self, base_loss: Callable, params, global_params, batch,
+                   client_state, rng):
+        """base_loss(params, batch, rng) -> (loss, metrics); override to add
+        regularizers that see the global params."""
+        return base_loss(params, batch, rng)
+
+    def grad_transform(self, grad, client_state, server_state):
+        return grad
+
+    def client_state_update(self, client_state, server_state, delta,
+                            n_local_steps, lr):
+        return client_state
+
+    # -- delta pipeline ---------------------------------------------------
+    def postprocess(self, delta, client_state, rng):
+        """Client-side delta transform (clip/noise/compress). Returns
+        (delta, new_client_state)."""
+        return delta, client_state
+
+    # -- server -----------------------------------------------------------
+    def server_update(self, params, agg_delta, server_state):
+        """params + aggregated delta (server_lr scaled). Returns
+        (new_params, new_server_state)."""
+        lr = self.fl.server_lr
+        return tree_add(params, agg_delta, lr), server_state
+
+    def describe(self) -> str:
+        return f"{self.name}(server_opt={self.fl.server_optimizer})"
+
+
+def client_sgd_step(params, grad, lr, momentum_state=None, momentum=0.0):
+    """The client-side optimizer used by local epochs."""
+    if momentum and momentum_state is not None:
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, momentum_state, grad)
+        new_p = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype),
+                             params, new_m)
+        return new_p, new_m
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                        params, grad), momentum_state

@@ -1,0 +1,81 @@
+"""Deterministic synthetic data pipelines (FLsim Dataset contract).
+
+Two root datasets:
+- ``SyntheticVision``: CIFAR-10 / MNIST-shaped classification data with a
+  planted linear-signal so models can actually learn (losses decrease and
+  accuracies separate across strategies, as the paper's figures need).
+- ``SyntheticLM``: token streams with an order-k Markov structure for the
+  LM-family architectures.
+
+Every pipeline exposes prepare_root_dataset / distribute_into_chunks /
+client_batches with a position cursor, so checkpoints can resume the exact
+data order (fault tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data import partition as part_mod
+
+
+@dataclasses.dataclass
+class SyntheticVision:
+    n_items: int = 2048
+    shape: tuple = (32, 32, 3)
+    n_classes: int = 10
+    seed: int = 0
+    noise: float = 0.8
+
+    def prepare_root_dataset(self):
+        rng = np.random.RandomState(self.seed)
+        y = rng.randint(0, self.n_classes, self.n_items)
+        protos = rng.randn(self.n_classes, *self.shape).astype(np.float32)
+        x = protos[y] + self.noise * rng.randn(
+            self.n_items, *self.shape).astype(np.float32)
+        return x, y
+
+    def distribute_into_chunks(self, kind: str, n_clients: int,
+                               alpha: float = 0.5):
+        x, y = self.prepare_root_dataset()
+        parts = part_mod.partition(kind, y, n_clients, alpha, self.seed)
+        return x, y, parts
+
+    @staticmethod
+    def client_batches(x, y, idx, batch_size: int, n_steps: int, seed: int,
+                       cursor: int = 0):
+        """Deterministic batches for one client; returns (batches, cursor)."""
+        rng = np.random.RandomState(seed)
+        order = idx[rng.permutation(len(idx))]
+        reps = int(np.ceil((cursor + n_steps * batch_size) / max(len(order), 1)))
+        stream = np.concatenate([order] * max(reps, 1))
+        sel = stream[cursor:cursor + n_steps * batch_size]
+        sel = sel.reshape(n_steps, batch_size)
+        batches = {"x": x[sel], "y": y[sel]}
+        return batches, cursor + n_steps * batch_size
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int = 512
+    seed: int = 0
+
+    def tokens(self, batch: int, seq: int, salt: int = 0):
+        """Markov-ish token stream: next token depends on previous one."""
+        rng = np.random.RandomState(self.seed + salt)
+        trans = rng.permutation(self.vocab)
+        toks = np.zeros((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.randint(0, self.vocab, batch)
+        noise = rng.rand(batch, seq)
+        rand_tok = rng.randint(0, self.vocab, (batch, seq))
+        for t in range(seq):
+            nxt = trans[toks[:, t]]
+            toks[:, t + 1] = np.where(noise[:, t] < 0.75, nxt, rand_tok[:, t])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def client_batches(self, client_id: int, n_steps: int, batch: int,
+                       seq: int, round_idx: int = 0):
+        out = [self.tokens(batch, seq, salt=client_id * 100003 + round_idx * 7 + s)
+               for s in range(n_steps)]
+        return {k: np.stack([o[k] for o in out]) for k in out[0]}

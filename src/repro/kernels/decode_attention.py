@@ -1,0 +1,121 @@
+"""Pallas TPU decode-attention kernel: one query token over a long KV cache.
+
+Decode attention is HBM-bandwidth-bound: the whole KV cache streams through
+VMEM once per step. The kernel therefore:
+- processes one (batch, kv-head) pair per grid row with the whole GQA query
+  group (G = H // KV queries) resident in VMEM — the cache is read ONCE for
+  the group rather than once per query head;
+- iterates kv blocks on the sequential trailing grid dim with the online
+  softmax accumulator in VMEM scratch;
+- masks by the per-sequence valid ``length`` (partially filled caches).
+
+Emits (o, m, l) so callers can log-sum-exp-combine partial results across a
+sequence-sharded cache (chunk-parallel decode; see models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+STATS_LANES = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                      # (G, Dk)
+        k = k_ref[0].astype(jnp.float32)                      # (bk, Dk)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (G, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=1)
+        m_scr[:, 0] = m_new
+        v = v_ref[0].astype(jnp.float32)                      # (bk, Dv)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        # Unnormalized output + stats; caller divides (possibly after a
+        # cross-shard combine).
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+        m_ref[0] = m_scr[:, :1].astype(m_ref.dtype)
+        l_ref[0] = l_scr[:, :1].astype(l_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention_fwd(q, k, v, length, *, scale: float | None = None,
+                         block_k: int = 512, interpret: bool = False):
+    """q: (B, H, Dk); k: (B, S, KV, Dk); v: (B, S, KV, Dv); length: (B,) int32.
+
+    Returns unnormalized (o: (B, H, Dv) f32, m: (B, H) f32, l: (B, H) f32)
+    where ``softmax_output = o / l`` — kept separate for LSE-combines.
+    """
+    B, H, Dk = q.shape
+    _, S, KV, Dv = v.shape
+    G = H // KV
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(Dk))
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+
+    qf = q.reshape(B * KV, G, Dk)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * KV, S, Dk)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * KV, S, Dv)
+    lengths = jnp.broadcast_to(length[:, None], (B, KV)).reshape(B * KV)
+
+    grid = (B * KV, S // block_k)
+
+    o, m, l = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bk, ki: (bk,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, Dk), lambda bk, ki: (bk, 0, 0)),
+            pl.BlockSpec((1, block_k, Dk), lambda bk, ki: (bk, ki, 0)),
+            pl.BlockSpec((1, block_k, Dv), lambda bk, ki: (bk, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, Dv), lambda bk, ki: (bk, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda bk, ki: (bk, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda bk, ki: (bk, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KV, G, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B * KV, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KV, G, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, STATS_LANES), jnp.float32),
+            pltpu.VMEM((G, STATS_LANES), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qf, kf, vf)
+    return (o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H))

@@ -1,0 +1,135 @@
+"""Pallas TPU flash-attention forward kernel (causal / full, GQA, MLA dims).
+
+TPU adaptation notes (vs the CUDA flash-attention the literature describes):
+- tiling is chosen for VMEM residency and MXU alignment: q/k tiles are
+  (block_q x Dk) / (block_k x Dk) with block sizes multiples of 128 (lane dim)
+  and 8 (sublane dim);
+- the kv loop is the innermost *sequential* grid dimension — TPU grids execute
+  the trailing dimension in order on a core, so the online-softmax accumulator
+  lives in VMEM scratch across kv steps (no atomics / shared-memory banking);
+- GQA is handled by an index map (q head h reads kv head h // group) rather
+  than materializing repeated KV.
+
+Supports Dk != Dv (MLA uses qk dim 96, v dim 64 — both padded to 128 lanes by
+the wrapper when needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+STATS_LANES = 128  # m/l scratch uses a full lane register row per q row
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                causal: bool, scale: float, block_q: int, block_k: int,
+                q_offset: int):
+    """One (batch*head, q_block, kv_block) grid step."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + qi * block_q
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, Dk)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, Dk)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=1)
+        m_scr[:, 0] = m_new
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    if causal:
+        # Skip kv blocks strictly above the diagonal (block-level early exit).
+        pl.when(k_start <= q_start + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "q_offset",
+                     "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        scale: float | None = None, block_q: int = 512,
+                        block_k: int = 512, q_offset: int = 0,
+                        interpret: bool = False):
+    """q: (B, Sq, H, Dk); k: (B, Sk, KV, Dk); v: (B, Sk, KV, Dv) -> (B, Sq, H, Dv).
+
+    ``q_offset`` is the global position of q row 0 (static; used when the
+    caller shards the query sequence).
+    """
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, Dv = v.shape
+    G = H // KV
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(Dk))
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+
+    # Layouts: q (B*H, Sq, Dk); k/v (B*KV, Sk, D*)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, Dk)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, Dk)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, Dv)
+
+    grid = (B * H, Sq // block_q, Sk // block_k)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * KV + h // G, ki, 0)
+
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dk), q_map),
+            pl.BlockSpec((1, block_k, Dk), kv_map),
+            pl.BlockSpec((1, block_k, Dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dv), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
+            pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(B, H, Sq, Dv), 1, 2)

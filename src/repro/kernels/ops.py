@@ -1,0 +1,294 @@
+"""Public kernel API with backend dispatch.
+
+Backends:
+- ``pallas``    — the Pallas TPU kernels (production target);
+- ``interpret`` — same kernels executed with ``interpret=True`` (CPU-correct);
+- ``jnp``       — blockwise pure-jnp implementations with flash-style memory
+                  behaviour. This is what the CPU dry-run compiles, so the
+                  lowered HLO never materializes an (S x S) score matrix.
+
+Default: ``pallas`` on TPU, ``jnp`` elsewhere; override with env
+``REPRO_KERNEL_IMPL``. Training always differentiates through the jnp
+blockwise path (flash-style recomputing backward via ``jax.custom_vjp``).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+
+
+def backend() -> str:
+    impl = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure jnp — forward
+# ---------------------------------------------------------------------------
+
+def _score_dtype():
+    """REPRO_BF16_SCORES=1: materialize attention scores/probs in bf16.
+
+    The Pallas TPU kernel computes f32 scores in VMEM — they never touch
+    HBM. The jnp blockwise stand-in (CPU dry-run) materializes them, so the
+    roofline harness enables this flag to reproduce the KERNEL's HBM traffic
+    profile; numerics-sensitive tests run with it off (f32)."""
+    return jnp.bfloat16 if os.environ.get("REPRO_BF16_SCORES") == "1" \
+        else jnp.float32
+
+
+def _blockwise_fwd(q, k, v, causal, q_offset, scale, block_q, block_k):
+    """Returns (out (B,Sq,H,Dv), lse (B,H,Sq) f32). Memory O(block) not O(S^2)."""
+    B, Sq, H, Dk = q.shape
+    _, Sk, KVH, Dv = v.shape
+    G = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    qg = jnp.moveaxis(q.reshape(B, nq, block_q, KVH, G, Dk), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, block_k, KVH, Dk), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, block_k, KVH, Dv), 1, 0)
+
+    def per_qblock(qi, qblk):
+        q_start = q_offset + qi * block_q
+
+        def kv_step(carry, xs):
+            o, m, l = carry
+            kb, vb, ks = xs
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kb).astype(_score_dtype())
+            s = s * jnp.asarray(scale, s.dtype)
+            if causal:
+                qpos = q_start + jnp.arange(block_q)
+                kpos = ks + jnp.arange(block_k)
+                s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                              s, jnp.asarray(-1e30, s.dtype))
+            s = s.astype(jnp.float32)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None]).astype(_score_dtype())
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.astype(jnp.float32).sum(-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb)
+            o = o * alpha[..., None] + pv.astype(jnp.float32)
+            return (o, m_new, l), None
+
+        o0 = jnp.zeros((B, KVH, G, block_q, Dv), jnp.float32)
+        m0 = jnp.full((B, KVH, G, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
+        ks = jnp.arange(nk) * block_k
+        if causal:
+            # only scan kv blocks that can intersect the causal triangle
+            pass  # masking handles it; block skipping is a pallas-level win
+        (o, m, l), _ = jax.lax.scan(kv_step, (o0, m0, l0), (kc, vc, ks))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        out = jnp.moveaxis(o, 3, 1).reshape(B, block_q, KVH * G, Dv)
+        return out.astype(q.dtype), lse.reshape(B, H, block_q)
+
+    _, (outs, lses) = jax.lax.scan(
+        lambda c, xs: (c, per_qblock(*xs)), 0, (jnp.arange(nq), qg))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, Dv)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(B, H, Sq)   # (nq,B,H,bq)->(B,H,Sq)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Flash backward (recomputes p per block pair; saves only out + lse)
+# ---------------------------------------------------------------------------
+
+def _blockwise_bwd(q, k, v, out, lse, dout, causal, q_offset, scale,
+                   block_q, block_k):
+    """Flash backward, KV-outer / Q-inner loop order.
+
+    dk/dv for a kv block are EMITTED per step (scan ys — written once each)
+    while only dq (Sq-sized, the small side under sequence sharding) rides
+    the carry. The kv-outer order cuts the dominant HBM term ~(Sk/Sq)x vs
+    carrying Sk-sized dk/dv accumulators through a q-outer scan
+    (EXPERIMENTS.md §Perf iteration 2).
+    """
+    B, Sq, H, Dk = q.shape
+    _, Sk, KVH, Dv = v.shape
+    G = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    # delta_i = rowsum(dout_i * out_i)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    delta = jnp.moveaxis(delta, 1, 2)                       # (B, H, Sq)
+
+    qg = q.reshape(B, Sq, KVH, G, Dk)
+    dog = dout.reshape(B, Sq, KVH, G, Dv)
+    lseg = lse.reshape(B, KVH, G, Sq)
+    delg = delta.reshape(B, KVH, G, Sq)
+    kc = jnp.moveaxis(k.reshape(B, nk, block_k, KVH, Dk), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, block_k, KVH, Dv), 1, 0)
+
+    def kv_step(dq_acc, kxs):
+        kb, vb, ks = kxs
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, kb).astype(_score_dtype())
+        s = s * jnp.asarray(scale, s.dtype)
+        if causal:
+            qpos = q_offset + jnp.arange(Sq)
+            kpos = ks + jnp.arange(block_k)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                          s, jnp.asarray(-1e30, s.dtype))
+        p = jnp.exp(s.astype(jnp.float32)
+                    - lseg[..., None]).astype(_score_dtype())
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", dog, vb).astype(_score_dtype())
+        ds = (p.astype(jnp.float32) * (dp.astype(jnp.float32)
+                                       - delg[..., None])
+              * scale).astype(_score_dtype())
+        dqb = jnp.einsum("bkgqt,btkd->bqkgd", ds.astype(kb.dtype), kb)
+        dkb = jnp.einsum("bkgqt,bqkgd->btkd", ds.astype(qg.dtype), qg)
+        dvb = jnp.einsum("bkgqt,bqkgd->btkd", p.astype(dog.dtype), dog)
+        return dq_acc + dqb.astype(jnp.float32), (dkb, dvb)
+
+    dq0 = jnp.zeros((B, Sq, KVH, G, Dk), jnp.float32)
+    ks = jnp.arange(nk) * block_k
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, (kc, vc, ks))
+    dq = dq.reshape(B, Sq, H, Dk).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, KVH, Dk).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, KVH, Dv).astype(v.dtype)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public flash attention (differentiable, backend-dispatched)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attention(q, k, v, q_offset=0, causal: bool = True,
+                    scale: float | None = None, block_q: int = 512,
+                    block_k: int = 512):
+    """Differentiable flash attention. q:(B,Sq,H,Dk) k:(B,Sk,KV,Dk) v:(B,Sk,KV,Dv).
+
+    ``q_offset`` — global position of q row 0; may be a traced scalar (e.g.
+    ``axis_index('model') * S_loc`` for sequence-sharded attention).
+    """
+    out, _ = _fa_fwd_rule(q, k, v, q_offset, causal, scale, block_q, block_k)
+    return out
+
+
+def _is_static_int(x) -> bool:
+    return isinstance(x, (int, np.integer))
+
+
+def _fa_fwd_rule(q, k, v, q_offset, causal, scale, block_q, block_k):
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(q.shape[-1]))
+    impl = backend()
+    if impl in ("pallas", "interpret") and _is_static_int(q_offset):
+        from repro.kernels.flash_attention import flash_attention_fwd
+        out = flash_attention_fwd(
+            q, k, v, causal=causal, scale=scale, block_q=block_q,
+            block_k=block_k, q_offset=int(q_offset),
+            interpret=(impl == "interpret"))
+        # lse is recomputed blockwise in the bwd rule when grads are needed
+        return out, (q, k, v, q_offset, out, None)
+    out, lse = _blockwise_fwd(q, k, v, causal, q_offset, scale,
+                              block_q, block_k)
+    return out, (q, k, v, q_offset, out, lse)
+
+
+def _fa_bwd_rule(causal, scale, block_q, block_k, res, dout):
+    q, k, v, q_offset, out, lse = res
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(q.shape[-1]))
+    if lse is None:  # pallas fwd didn't keep lse: recompute blockwise
+        out, lse = _blockwise_fwd(q, k, v, causal, q_offset, scale,
+                                  block_q, block_k)
+    dq, dk, dv = _blockwise_bwd(q, k, v, out, lse, dout, causal, q_offset,
+                                scale, block_q, block_k)
+    d_off = None if _is_static_int(q_offset) else jnp.zeros_like(q_offset)
+    return dq, dk, dv, d_off
+
+
+flash_attention.defvjp(_fa_fwd_rule, _fa_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (not differentiated — serving only)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, length, *, scale: float | None = None,
+                     block_k: int = 512, combine: bool = True):
+    """One-token attention over a KV cache; optionally returns (o, m, l) stats."""
+    impl = backend()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.decode_attention import decode_attention_fwd
+        o, m, l = decode_attention_fwd(
+            q, k, v, length, scale=scale, block_k=block_k,
+            interpret=(impl == "interpret"))
+    else:
+        o, m, l = _decode_blockwise(q, k, v, length, scale=scale,
+                                    block_k=block_k)
+    if combine:
+        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return o, m, l
+
+
+def _decode_blockwise(q, k, v, length, *, scale, block_k):
+    """jnp blockwise decode: scans kv chunks; never forms (B,H,S) f32 at once
+    beyond one chunk. Returns unnormalized (o, m, l)."""
+    B, H, Dk = q.shape
+    _, S, KVH, Dv = v.shape
+    G = H // KVH
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(Dk))
+    block_k = min(block_k, S)
+    nk = S // block_k
+    qg = q.reshape(B, KVH, G, Dk)
+    kc = jnp.moveaxis(k.reshape(B, nk, block_k, KVH, Dk), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, block_k, KVH, Dv), 1, 0)
+
+    def step(carry, xs):
+        o, m, l = carry
+        kb, vb, ks = xs
+        s = jnp.einsum("bkgd,btkd->bkgt", qg, kb).astype(jnp.float32) * scale
+        kpos = ks + jnp.arange(block_k)
+        s = jnp.where(kpos[None, None, None] < length[:, None, None, None],
+                      s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        o = o * alpha[..., None] + jnp.einsum(
+            "bkgt,btkd->bkgd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((B, KVH, G, Dv), jnp.float32)
+    m0 = jnp.full((B, KVH, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0),
+                                (kc, vc, jnp.arange(nk) * block_k))
+    return o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm / quantized aggregation
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    impl = backend()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.rmsnorm import rmsnorm as _k
+        return _k(x, w, eps=eps, interpret=(impl == "interpret"))
+    return _ref.rmsnorm_ref(x, w, eps)
+
+
+def quant_aggregate(qdeltas, scales, weights):
+    impl = backend()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.quant_aggregate import quant_aggregate as _k
+        return _k(qdeltas, scales, weights, interpret=(impl == "interpret"))
+    return _ref.quant_aggregate_ref(qdeltas, scales, weights)
+
+
+def quantize_blockwise(x, block: int = 256):
+    return _ref.quantize_blockwise_ref(x, block=block)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for the interpret-mode kernel tests and the
+numerically-stable reference used by small-shape unit tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, q_offset=0,
+                        scale: float | None = None):
+    """Plain softmax attention.
+
+    q: (B, Sq, H, Dk); k: (B, Sk, KV, Dk); v: (B, Sk, KV, Dv) with H % KV == 0.
+    Positions of q are ``q_offset + arange(Sq)`` for causal masking.
+    Returns (B, Sq, H, Dv).
+    """
+    B, Sq, H, Dk = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(Dk)
+    qg = q.reshape(B, Sq, KV, G, Dk)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+def decode_attention_ref(q, k, v, length, *, scale: float | None = None,
+                         return_stats: bool = False):
+    """Single-token attention over a (possibly partially filled) KV cache.
+
+    q: (B, H, Dk); k: (B, S, KV, Dk); v: (B, S, KV, Dv); length: (B,) valid
+    prefix lengths. Returns (B, H, Dv) (plus (m, l) row stats if requested —
+    used for cross-shard log-sum-exp combination).
+    """
+    B, H, Dk = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(Dk)
+    qg = q.reshape(B, KV, G, Dk)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) * scale
+    valid = jnp.arange(k.shape[1])[None] < length[:, None]        # (B, S)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v)
+    o = (o.astype(jnp.float32) / jnp.maximum(l, 1e-30)[..., None])
+    o = o.reshape(B, H, v.shape[-1])
+    if return_stats:
+        return o, m.reshape(B, H), l.reshape(B, H)
+    return o
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """RMSNorm over the last dim; f32 accumulation."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def quant_aggregate_ref(qdeltas, scales, weights):
+    """Dequantize int8 client deltas and reduce with client weights.
+
+    qdeltas: (C, N) int8; scales: (C, N // block) f32 per-block scales;
+    weights: (C,) f32 normalized client weights. Returns (N,) f32:
+    ``sum_c weights[c] * qdeltas[c] * scales[c, block(n)]``.
+    """
+    C, N = qdeltas.shape
+    nblocks = scales.shape[1]
+    block = N // nblocks
+    d = qdeltas.astype(jnp.float32).reshape(C, nblocks, block)
+    d = d * scales[..., None]
+    return jnp.einsum("c,cnb->nb", weights, d).reshape(N)
+
+
+def quantize_blockwise_ref(x, block: int = 256):
+    """Symmetric int8 block quantization. x: (N,) -> (int8 (N,), scales (N/block,))."""
+    N = x.shape[0]
+    nblocks = N // block
+    xb = x.reshape(nblocks, block)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(N), scale.astype(jnp.float32)

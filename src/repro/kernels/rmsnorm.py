@@ -1,0 +1,45 @@
+"""Pallas TPU fused RMSNorm kernel (rows tiled, f32 accumulation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (BR, D)
+    w = w_ref[...].astype(jnp.float32)            # (1, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    """x: (..., D); w: (D,). Rows are tiled ``block_rows`` at a time."""
+    shape = x.shape
+    D = shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    block_rows = min(block_rows, R)
+    pad = (-R) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    Rp = xf.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(Rp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, D), x.dtype),
+        interpret=interpret,
+    )(xf, w.reshape(1, D))
+    if pad:
+        out = out[:R]
+    return out.reshape(shape)

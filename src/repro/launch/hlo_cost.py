@@ -1,0 +1,265 @@
+"""Recursive HLO cost model over the compiled (post-SPMD, post-fusion) text.
+
+XLA's CPU ``cost_analysis()`` counts while-loop bodies ONCE, which makes it
+useless for scanned layer stacks. This walker parses ``compiled.as_text()``
+into per-computation symbol tables and computes, with while-loop trip-count
+multiplication:
+
+  flops            — 2*numel(result)*K for every dot (K = contracted size),
+                     counted in all computations (incl. fusion bodies);
+  hbm_bytes        — operand+result bytes of top-level ops (fusion ops count
+                     their parameters/results only => post-fusion traffic);
+  collective bytes — per collective kind, with replica-group-aware per-chip
+                     traffic estimates (AG/A2A: r*(g-1)/g, AR: 2r(g-1)/g,
+                     RS: r*(g-1), permute: r).
+
+Shapes in the module are per-device, so every number is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_shape_list(seg: str):
+    """[(dtype, [dims...]), ...] for every TYPE[dims] in the segment."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(d) if d else _DTYPE_BYTES[dt]
+               for dt, d in shapes)
+
+
+@dataclasses.dataclass
+class Line:
+    name: str
+    result_shapes: list          # [(dtype, dims)]
+    op: str
+    rest: str                    # text after the opname '('
+
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def parse_module(text: str):
+    """-> dict comp_name -> list[Line]"""
+    comps: dict[str, list] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        ls = line.strip()
+        if not ls:
+            continue
+        # computation headers look like: %name (params...) -> type {   or
+        # ENTRY %name ... {
+        if ls.endswith("{") and ("(" in ls) and ("=" not in ls.split("(")[0]):
+            m = _NAME_RE.search(ls)
+            cur = m.group(1) if m else f"comp{len(comps)}"
+            comps[cur] = []
+            continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(ls)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs: TYPE op-name(args), attrs...
+        # find the op name: first identifier followed by '(' after the type
+        tm = re.match(r"^((?:\([^)]*\)|[a-z0-9_]+\[[0-9,]*\]\S*)\s+)+"
+                      r"([a-z][\w\-]*)\(", rhs)
+        if not tm:
+            continue
+        op = tm.group(2)
+        type_seg = rhs[:tm.start(2)]
+        comps[cur].append(Line(name, _parse_shape_list(type_seg), op,
+                               rhs[tm.end(2):]))
+    return comps
+
+
+def _group_size(rest: str, default: int = 2) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]*)\}", rest)
+    if m:
+        return m.group(1).count(",") + 1
+    return default
+
+
+def _trip_count(comps, cond_name: str):
+    """Trip count from the while condition: compare(*, constant(N))."""
+    for ln in comps.get(cond_name, ()):
+        if ln.op == "compare":
+            m = re.findall(r"constant\((\d+)\)", ln.rest)
+            if m:
+                return int(m[-1])
+    # search constants referenced in the condition computation
+    for ln in comps.get(cond_name, ()):
+        if ln.op == "constant":
+            m = re.match(r"\((\d+)\)", ln.rest.strip())
+            if m:
+                return int(m.group(1))
+    return 1
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # traffic inside while-bodies nested >= 2 deep (inner attention / ssm /
+    # ring loops). On TPU these loops are Pallas kernels whose intermediates
+    # stay in VMEM, so (hbm_bytes - hbm_inner_bytes) is the kernelized HBM
+    # floor; hbm_bytes is the as-compiled (no inter-op reuse) ceiling.
+    hbm_inner_bytes: float = 0.0
+    coll_traffic: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.hbm_bytes * k, self.hbm_inner_bytes * k)
+        for kk, v in self.coll_traffic.items():
+            c.coll_traffic[kk] = v * k
+        for kk, v in self.coll_counts.items():
+            c.coll_counts[kk] = v * k
+        return c
+
+    def add(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.hbm_inner_bytes += o.hbm_inner_bytes
+        for kk, v in o.coll_traffic.items():
+            self.coll_traffic[kk] += v
+        for kk, v in o.coll_counts.items():
+            self.coll_counts[kk] += v
+
+
+def _dot_flops(ln: Line, table: dict) -> float:
+    out_numel = sum(math.prod(d) if d else 1 for _, d in ln.result_shapes)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln.rest)
+    args = _NAME_RE.findall(ln.rest.split("),")[0])
+    K = 1
+    if m and args:
+        lhs = table.get(args[0])
+        if lhs:
+            dims = lhs[0][1]
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(dims):
+                    K *= dims[idx]
+    return 2.0 * out_numel * K
+
+
+def _call_target(rest: str, attr: str):
+    m = re.search(attr + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def analyze(text: str, entry: str | None = None) -> Cost:
+    comps = parse_module(text)
+    if not comps:
+        return Cost()
+    # entry = computation with 'main' in name, else the largest
+    if entry is None:
+        cands = [c for c in comps if "main" in c]
+        entry = cands[0] if cands else max(comps, key=lambda c: len(comps[c]))
+    tables = {c: {ln.name: ln.result_shapes for ln in lines}
+              for c, lines in comps.items()}
+    memo: dict[str, Cost] = {}
+
+    # flops inside fusion bodies attribute to the fusion call site; find the
+    # computation each fusion body belongs to lazily via the call attr.
+
+    def comp_cost(cname: str, top: bool, depth: int = 0) -> Cost:
+        key = f"{cname}|{top}|{min(depth, 2)}"
+        if key in memo:
+            return memo[key]
+        cost = Cost()
+        table = tables.get(cname, {})
+        inner = depth >= 2
+
+        def hbm(nb):
+            cost.hbm_bytes += nb
+            if inner:
+                cost.hbm_inner_bytes += nb
+
+        for ln in comps.get(cname, ()):
+            if ln.op == "dot":
+                cost.flops += _dot_flops(ln, table)
+            elif ln.op == "convolution":
+                # rough: 2 * out_numel * (kernel numel / out_channels)
+                cost.flops += 2.0 * sum(
+                    math.prod(d) for _, d in ln.result_shapes)
+            if ln.op == "while":
+                body = _call_target(ln.rest, "body")
+                cond = _call_target(ln.rest, "condition")
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    cost.add(comp_cost(body, top, depth + 1)
+                             .scaled(max(trips, 1)))
+                continue
+            if ln.op in ("call", "conditional", "async-start"):
+                tgt = _call_target(ln.rest, "to_apply") or \
+                    _call_target(ln.rest, "called_computation")
+                if tgt:
+                    cost.add(comp_cost(tgt, top, depth))
+                continue
+            if ln.op == "fusion":
+                tgt = _call_target(ln.rest, "calls")
+                if tgt:
+                    fin = comp_cost(tgt, False, depth)
+                    cost.flops += fin.flops
+                    cost.add(Cost(0, 0, 0, fin.coll_traffic, fin.coll_counts))
+                if top:
+                    # post-fusion HBM traffic: fusion operands + results
+                    opshapes = _parse_shape_list(ln.rest)
+                    hbm(_nbytes(ln.result_shapes) +
+                        sum(_nbytes([s]) for s in opshapes))
+                continue
+            if top and ln.op not in ("parameter", "constant", "tuple",
+                                     "get-tuple-element", "bitcast"):
+                nb = _nbytes(ln.result_shapes)
+                # operand bytes via symbol table
+                args = _NAME_RE.findall(ln.rest.split(")")[0])
+                for a in args:
+                    if a in table:
+                        nb += _nbytes(table[a])
+                hbm(nb)
+            if ln.op in COLLECTIVES or any(
+                    ln.op == c + "-start" for c in COLLECTIVES):
+                kind = ln.op.replace("-start", "")
+                g = _group_size(ln.rest)
+                r = _nbytes(ln.result_shapes)
+                cost.coll_counts[kind] += 1
+                if kind in ("all-gather", "all-to-all"):
+                    cost.coll_traffic[kind] += r * (g - 1) / g
+                elif kind == "all-reduce":
+                    cost.coll_traffic[kind] += 2 * r * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    cost.coll_traffic[kind] += r * (g - 1)
+                else:
+                    cost.coll_traffic[kind] += r
+        memo[key] = cost
+        return cost
+
+    return comp_cost(entry, True)

@@ -1,0 +1,65 @@
+"""FL training launcher.
+
+Two paths:
+- small archs (paper models): the host Executor (Alg. 1) with spatial rounds.
+- LM archs: temporal rounds via the same step builders the dry-run compiles,
+  on whatever mesh the process sees (CPU: meshless; TPU pod: production mesh).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --job examples/jobs/quickstart.yaml
+  PYTHONPATH=src python -m repro.launch.train --arch yi-34b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--job", default=None, help="job yaml (paper Fig. 2)")
+    ap.add_argument("--arch", default="flsim-cnn")
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced config for LM archs")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile only (delegates to launch.dryrun)")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch import dryrun
+        sys.argv = ["dryrun", "--arch", args.arch, "--shape", "train_4k"]
+        return dryrun.main()
+
+    from repro.core.jobs import load_job
+    from repro.runtime.executor import Executor
+
+    if args.job:
+        job = load_job(args.job)
+    else:
+        job = load_job({
+            "name": f"train-{args.arch}",
+            "model": {"arch": args.arch, "reduced": args.reduced},
+            "dataset": {"dataset": "synthetic_vision", "n_items": 512},
+            "strategy": {"strategy": "fedavg",
+                         "train_params": {"n_clients": args.clients,
+                                          "client_lr": 0.05,
+                                          "local_epochs": 1,
+                                          "rounds": args.rounds,
+                                          "checkpoint_every": 2}},
+        })
+    ex = Executor(job, ckpt_dir=args.ckpt_dir).scaffold()
+    state, logger = ex.run(args.rounds)
+    print(logger.dashboard())
+    return state
+
+
+if __name__ == "__main__":
+    main()

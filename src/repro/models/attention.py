@@ -1,0 +1,367 @@
+"""Attention blocks: GQA (+ QKV bias, qk-norm) and MLA, for three phases.
+
+Phases and their sharding (see DESIGN.md):
+- train / prefill: activations sequence-sharded over ``model`` (SP); weights
+  arrive fully gathered (ZeRO-3 gather happens in transformer.py). Each chip
+  runs blockwise flash attention over its local q rows with K/V all-gathered
+  along the sequence — positions are offset by ``axis_index('model') * S_loc``.
+- decode: weights are TP-resident and activations replicated over ``model``;
+  the KV cache is sequence-sharded over ``model`` and partial attention
+  results are log-sum-exp combined (chunk-parallel decode).
+
+All functions take an ``AxisCtx``: with a no-axis ctx they are ordinary
+single-device attention (the test oracle).
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.sharding.axes import AxisCtx
+
+
+class KVCache(NamedTuple):
+    """Sequence-sharded KV cache. k/v: (B, S_loc, KV, D); length: (B,) global."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+class LatentCache(NamedTuple):
+    """MLA cache: compressed kv latent + shared rope key. (B, S_loc, R)"""
+    ckv: jnp.ndarray
+    krope: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def gqa_param_shapes(cfg: ModelConfig) -> dict:
+    D, H, KV, HD = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    shapes = {
+        "wq": (D, H * HD),
+        "wk": (D, KV * HD),
+        "wv": (D, KV * HD),
+        "wo": (H * HD, D),
+    }
+    if cfg.qkv_bias:
+        shapes |= {"bq": (H * HD,), "bk": (KV * HD,), "bv": (KV * HD,)}
+    if cfg.qk_norm:
+        shapes |= {"q_norm": (HD,), "k_norm": (HD,)}
+    return shapes
+
+
+def mla_param_shapes(cfg: ModelConfig) -> dict:
+    m, D, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": (D, m.q_lora_rank),
+        "q_norm": (m.q_lora_rank,),
+        "wuq": (m.q_lora_rank, H * qk),
+        "wdkv": (D, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": (m.kv_lora_rank,),
+        "wukv": (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim)),
+        "wo": (H * m.v_head_dim, D),
+    }
+
+
+def attn_param_shapes(cfg: ModelConfig) -> dict:
+    return mla_param_shapes(cfg) if cfg.attn_type == "mla" else gqa_param_shapes(cfg)
+
+
+def init_attn_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    shapes = attn_param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name.endswith("_norm"):
+            out[name] = jnp.ones(shape, dtype)
+        elif name.startswith("b"):
+            out[name] = jnp.zeros(shape, dtype)
+        else:
+            out[name] = dense_init(k, shape, in_dim=shape[0], dtype=dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel matmul helpers (decode phase: weights resident, acts tiny)
+# ---------------------------------------------------------------------------
+
+def col_matmul(ctx: AxisCtx, h, w_loc, b_loc=None, tp: bool = False):
+    """Column-parallel y = h @ W (+b), output all-gathered to full width."""
+    y = h @ w_loc
+    if b_loc is not None:
+        y = y + b_loc
+    if tp and ctx.model is not None:
+        y = ctx.all_gather(y, ctx.model, axis=y.ndim - 1)
+    return y
+
+
+def row_matmul(ctx: AxisCtx, h, w_loc, tp: bool = False):
+    """Row-parallel y = h @ W with h full-width: slice local rows, psum."""
+    if tp and ctx.model is not None:
+        n = w_loc.shape[0]
+        idx = ctx.index(ctx.model)
+        h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n, n, axis=h.ndim - 1)
+        return ctx.psum(h_loc @ w_loc, ctx.model)
+    return h @ w_loc
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _qkv(w, cfg: ModelConfig, h):
+    H, KV, HD = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, S = h.shape[0], h.shape[1]
+    q = h @ w["wq"]
+    k = h @ w["wk"]
+    v = h @ w["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+    q = q.reshape(B, S, H, HD)
+    k = k.reshape(B, S, KV, HD)
+    v = v.reshape(B, S, KV, HD)
+    if cfg.qk_norm:
+        q = rms_norm(q, w["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, w["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_seqsharded(ctx: AxisCtx, w: dict, h, cfg: ModelConfig,
+                   *, causal: bool = True, return_cache: bool = False):
+    """Train/prefill attention on the sequence-sharded residual stream.
+
+    h: (B, S_loc, D) — local sequence rows; K/V are all-gathered over ``model``.
+    Returns (B, S_loc, H*HD) [+ KVCache of the *local* rows].
+    """
+    S_loc = h.shape[1]
+    q, k, v = _qkv(w, cfg, h)
+    off = ctx.index(ctx.model) * S_loc
+    pos_loc = off + jnp.arange(S_loc)
+    q = apply_rope(q, pos_loc, cfg.rope_theta)
+    k = apply_rope(k, pos_loc, cfg.rope_theta)
+    cache = KVCache(k, v) if return_cache else None
+    kg = ctx.all_gather(k, ctx.model, axis=1)
+    vg = ctx.all_gather(v, ctx.model, axis=1)
+    o = ops.flash_attention(q, kg, vg, off, causal)
+    o = o.reshape(h.shape[0], S_loc, -1)
+    out = o @ w["wo"]
+    return (out, cache) if return_cache else out
+
+
+def gqa_decode(ctx: AxisCtx, w: dict, h, cache: KVCache, length,
+               cfg: ModelConfig, *, tp: bool = False):
+    """One-token decode with a sequence-sharded cache.
+
+    h: (B, 1, D) replicated over ``model``; cache.k/v: (B, S_loc, KV, HD)
+    holding global positions [idx*S_loc, (idx+1)*S_loc); length: (B,) current
+    context length (the new token goes to position ``length``). With
+    ``tp=True`` the projections are column/row-parallel over ``model``
+    (weights resident; only token-sized activations cross the ICI).
+    Returns (out (B, 1, D), new_cache).
+    """
+    B = h.shape[0]
+    H, KV, HD = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = col_matmul(ctx, h, w["wq"], w.get("bq"), tp).reshape(B, 1, H, HD)
+    k_new = col_matmul(ctx, h, w["wk"], w.get("bk"), tp).reshape(B, 1, KV, HD)
+    v_new = col_matmul(ctx, h, w["wv"], w.get("bv"), tp).reshape(B, 1, KV, HD)
+    if cfg.qk_norm:
+        q = rms_norm(q, w["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, w["k_norm"], cfg.norm_eps)
+    pos = length[:, None]                                    # (B, 1)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+    # scatter the new K/V row into the owning shard
+    S_loc = cache.k.shape[1]
+    start = ctx.index(ctx.model) * S_loc
+    local_idx = jnp.clip(pos[:, 0] - start, 0, S_loc - 1)    # (B,)
+    mine = (pos[:, 0] >= start) & (pos[:, 0] < start + S_loc)
+    onehot = (jax.nn.one_hot(local_idx, S_loc, dtype=cache.k.dtype)
+              * mine[:, None].astype(cache.k.dtype))         # (B, S_loc)
+    k = cache.k + onehot[:, :, None, None] * k_new
+    v = cache.v + onehot[:, :, None, None] * v_new
+
+    # chunk-parallel attention: local partials, then LSE combine over model
+    local_len = jnp.clip(length + 1 - start, 0, S_loc)
+    o, m, l = ops.decode_attention(q[:, 0], k, v, local_len, combine=False)
+    if ctx.model is not None:
+        stats = jnp.concatenate(
+            [o.reshape(B, -1), m.reshape(B, -1), l.reshape(B, -1)], axis=-1)
+        gathered = ctx.all_gather(stats[None], ctx.model, axis=0)  # (M, B, ...)
+        HDv = o.shape[-1]
+        o_all = gathered[..., :H * HDv].reshape(-1, B, H, HDv)
+        m_all = gathered[..., H * HDv:H * HDv + H].reshape(-1, B, H)
+        l_all = gathered[..., H * HDv + H:].reshape(-1, B, H)
+        m_g = m_all.max(0)
+        w_ = jnp.exp(m_all - m_g[None])
+        l_g = (l_all * w_).sum(0)
+        o = (o_all * w_[..., None]).sum(0) / jnp.maximum(l_g, 1e-30)[..., None]
+    else:
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+    out = row_matmul(ctx, o.astype(h.dtype).reshape(B, 1, -1), w["wo"], tp)
+    return out, KVCache(k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def _mla_q(w, cfg, h, positions):
+    m, H = cfg.mla, cfg.n_heads
+    B, S = h.shape[0], h.shape[1]
+    nope, rope_d = m.qk_nope_head_dim, m.qk_rope_head_dim
+    cq = rms_norm(h @ w["wdq"], w["q_norm"], cfg.norm_eps)
+    q = (cq @ w["wuq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(w, cfg, h, positions):
+    m = cfg.mla
+    dkv = h @ w["wdkv"]                                       # (B,S,R+rope)
+    ckv = rms_norm(dkv[..., :m.kv_lora_rank], w["kv_norm"], cfg.norm_eps)
+    krope = dkv[..., m.kv_lora_rank:]                         # (B,S,rope)
+    krope = apply_rope(krope[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def _mla_expand_kv(w, cfg, ckv):
+    m, H = cfg.mla, cfg.n_heads
+    B, S = ckv.shape[0], ckv.shape[1]
+    kv = (ckv @ w["wukv"]).reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+
+def mla_seqsharded(ctx: AxisCtx, w: dict, h, cfg: ModelConfig,
+                   *, causal: bool = True, return_cache: bool = False):
+    """MLA train/prefill.
+
+    Two algebraically identical forms (EXPERIMENTS.md §Perf):
+    - expanded (REPRO_MLA_ABSORBED=0): materialize per-head K/V from the
+      latent — matmul-friendly but writes/reads H*(Dk+Dv)-wide tensors;
+    - absorbed (default): fold W^UK into the queries and attend in the
+      latent space as MQA with one 288-wide shared KV head; W^UV is applied
+      to the 256-wide latent output. More attention FLOPs (R=256 > 160),
+      ~5x less attention HBM traffic — the right trade on TPU where the MLA
+      layers are memory-bound."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S_loc = h.shape[0], h.shape[1]
+    off = ctx.index(ctx.model) * S_loc
+    pos_loc = off + jnp.arange(S_loc)
+    q_nope, q_rope = _mla_q(w, cfg, h, pos_loc)
+    ckv, krope = _mla_kv_latent(w, cfg, h, pos_loc)
+    cache = LatentCache(ckv, krope) if return_cache else None
+    ckv_g = ctx.all_gather(ckv, ctx.model, axis=1)
+    krope_g = ctx.all_gather(krope, ctx.model, axis=1)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    R, nope = m.kv_lora_rank, m.qk_nope_head_dim
+    if os.environ.get("REPRO_MLA_ABSORBED", "1") == "1":
+        wukv = w["wukv"].reshape(R, H, nope + m.v_head_dim)
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wukv[..., :nope])
+        q_cat = jnp.concatenate([q_lat, q_rope], -1)       # (B,S,H,R+rope)
+        kv_cat = jnp.concatenate([ckv_g, krope_g], -1)[:, :, None, :]
+        o_lat = ops.flash_attention(q_cat, kv_cat, ckv_g[:, :, None, :],
+                                    off, causal, scale)    # (B,S,H,R)
+        o = jnp.einsum("bshr,rhv->bshv", o_lat, wukv[..., nope:])
+    else:
+        k_nope, v = _mla_expand_kv(w, cfg, ckv_g)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_g[:, :, None, :],
+                                      k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+            -1)
+        o = ops.flash_attention(q, k, v, off, causal, scale)
+    out = o.reshape(B, S_loc, -1) @ w["wo"]
+    return (out, cache) if return_cache else out
+
+
+def mla_decode(ctx: AxisCtx, w: dict, h, cache: LatentCache, length,
+               cfg: ModelConfig, *, tp: bool = False):
+    """Absorbed-form MLA decode: attention runs in the latent space, so the
+    per-step FLOPs scale with kv_lora_rank (288) instead of H*(Dk+Dv).
+
+    MLA decode keeps its (small) attention weights replicated over ``model``
+    (``tp`` only affects the surrounding FFN; see sharding/specs.py) — the
+    absorbed einsums are not head-shardable for H % mesh != 0."""
+    m, H = cfg.mla, cfg.n_heads
+    B = h.shape[0]
+    R, rope_d, nope = m.kv_lora_rank, m.qk_rope_head_dim, m.qk_nope_head_dim
+    pos = length[:, None]
+    q_nope, q_rope = _mla_q(w, cfg, h, pos)                   # (B,1,H,*)
+    ckv_new, krope_new = _mla_kv_latent(w, cfg, h, pos)       # (B,1,R)/(B,1,rope)
+
+    S_loc = cache.ckv.shape[1]
+    start = ctx.index(ctx.model) * S_loc
+    local_idx = jnp.clip(pos[:, 0] - start, 0, S_loc - 1)
+    mine = (pos[:, 0] >= start) & (pos[:, 0] < start + S_loc)
+    onehot = (jax.nn.one_hot(local_idx, S_loc, dtype=cache.ckv.dtype)
+              * mine[:, None].astype(cache.ckv.dtype))
+    ckv = cache.ckv + onehot[..., None] * ckv_new
+    krope = cache.krope + onehot[..., None] * krope_new
+
+    # absorb W^UK into q: q_lat (B,H,R) = q_nope @ Wuk_h^T
+    wukv = w["wukv"].reshape(R, H, nope + m.v_head_dim)
+    wuk = wukv[..., :nope]                                    # (R,H,nope)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk)
+
+    # latent-space attention over the local shard
+    scale = 1.0 / np.sqrt(nope + rope_d)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv)
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], krope)).astype(jnp.float32)
+    s = s * scale
+    local_len = jnp.clip(length + 1 - start, 0, S_loc)
+    valid = jnp.arange(S_loc)[None] < local_len[:, None]
+    s = jnp.where(valid[:, None], s, -1e30)
+    m_ = s.max(-1)
+    p = jnp.exp(s - m_[..., None])
+    l = p.sum(-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p.astype(ckv.dtype), ckv)
+
+    if ctx.model is not None:
+        stats = jnp.concatenate(
+            [o_lat.reshape(B, -1).astype(jnp.float32),
+             m_.reshape(B, -1), l.reshape(B, -1)], -1)
+        gathered = ctx.all_gather(stats[None], ctx.model, axis=0)
+        o_all = gathered[..., :H * R].reshape(-1, B, H, R)
+        m_all = gathered[..., H * R:H * R + H].reshape(-1, B, H)
+        l_all = gathered[..., H * R + H:].reshape(-1, B, H)
+        m_g = m_all.max(0)
+        w_ = jnp.exp(m_all - m_g[None])
+        l_g = (l_all * w_).sum(0)
+        o_lat = ((o_all * w_[..., None]).sum(0)
+                 / jnp.maximum(l_g, 1e-30)[..., None])
+    else:
+        o_lat = o_lat.astype(jnp.float32) / jnp.maximum(l, 1e-30)[..., None]
+
+    # expand through W^UV: o (B,H,v_dim)
+    wuv = wukv[..., nope:]                                    # (R,H,v)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat.astype(h.dtype), wuv)
+    out = o.reshape(B, 1, -1) @ w["wo"]
+    return out, LatentCache(ckv, krope)
+
+
+# ---------------------------------------------------------------------------
+# Cache initialization
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, s_loc: int, dtype=jnp.bfloat16):
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return LatentCache(
+            ckv=jnp.zeros((batch, s_loc, m.kv_lora_rank), dtype),
+            krope=jnp.zeros((batch, s_loc, m.qk_rope_head_dim), dtype))
+    HD = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, s_loc, cfg.n_kv_heads, HD), dtype),
+        v=jnp.zeros((batch, s_loc, cfg.n_kv_heads, HD), dtype))

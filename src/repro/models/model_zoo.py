@@ -1,0 +1,53 @@
+"""Model registry + parameter accounting."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models import transformer
+
+
+def build(name_or_cfg) -> "transformer.Model":
+    cfg = (name_or_cfg if isinstance(name_or_cfg, ModelConfig)
+           else get_config(name_or_cfg))
+    if cfg.family == "small":
+        from repro.models import small
+        return small.build_small(cfg)
+    return transformer.build_model(cfg)
+
+
+def _tree_numel(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, tuple))
+    return sum(math.prod(sh) for sh in leaves)
+
+
+def count_params(cfg: ModelConfig, padded: bool = False,
+                 active_only: bool = False) -> int:
+    """Parameter count from the logical shape tree.
+
+    padded=False discounts the vocab padding (reports the paper-faithful N);
+    active_only replaces each MoE layer's expert count with top_k (the 6*N_active*D
+    roofline numerator for MoE archs).
+    """
+    if cfg.family == "small":
+        from repro.models import small
+        return small.count_small_params(cfg)
+    shapes = transformer.param_shapes(cfg)
+    total = _tree_numel(shapes)
+    if not padded:
+        dv = (cfg.padded_vocab - cfg.vocab_size) * cfg.d_model
+        total -= dv  # embed
+        if not cfg.tie_embeddings:
+            total -= dv  # lm_head
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        if cfg.family == "hybrid":
+            n_moe_layers = (cfg.n_layers // cfg.hybrid.period) * \
+                           (cfg.hybrid.period // m.moe_every)
+        else:
+            n_moe_layers = cfg.n_layers // m.moe_every
+        per_expert = 3 * cfg.d_model * m.expert_d_ff
+        total -= n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return int(total)

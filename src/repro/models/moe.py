@@ -1,0 +1,336 @@
+"""Mixture-of-Experts with TPU-native expert parallelism.
+
+Layout (see DESIGN.md): the expert dim is sharded over the ``data`` axis
+(E_row = E / R experts per data row, resident — never gathered), the expert
+FFN dim over ``model`` (F_loc = F / M). One MoE layer's communication:
+
+  dispatch:  capacity buckets -> all_to_all(data) -> all_gather(model, tokens)
+  compute:   grouped matmuls on (E_row, C_tot, *) buckets
+  combine:   psum_scatter(model, tokens) -> all_to_all(data) -> weighted gather
+
+The psum_scatter chunk of model-chip m is exactly the token block gathered
+FROM m, so the reverse path lands every result back in its source slot with
+no metadata exchange — dropped tokens ride through as zero-padded slots.
+
+For decode the activations are already replicated over ``model`` (TP phase),
+so the token all-gather is skipped and the combine is a plain psum.
+
+With a no-axis ``AxisCtx`` this reduces to single-device capacity-bucket MoE
+(the oracle for tests, compared against a dense masked reference).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.axes import AxisCtx
+
+
+class MoEAux(NamedTuple):
+    load_balance: jnp.ndarray
+    z_loss: jnp.ndarray
+    drop_fraction: jnp.ndarray
+
+
+def moe_param_shapes(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.expert_d_ff
+    if m.ep_mode == "subgrid":
+        # (expert, f-slice) packed on one leading dim so a single named-axis
+        # product (data x model) shards it; parameter count is unchanged.
+        fs = m.f_sub
+        return {
+            "router": (D, E),
+            "w1": (E * fs, D, F // fs),
+            "w3": (E * fs, D, F // fs),
+            "w2": (E * fs, F // fs, D),
+        }
+    return {
+        "router": (D, E),
+        "w1": (E, D, F),
+        "w3": (E, D, F),
+        "w2": (E, F, D),
+    }
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    shapes = moe_param_shapes(cfg)
+    ks = jax.random.split(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), ks):
+        in_dim = shape[-2] if len(shape) == 3 else shape[0]
+        out[name] = dense_init(k, shape, in_dim=in_dim, dtype=dtype)
+    return out
+
+
+def capacity(n_tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(math.ceil(cf * n_tokens * top_k / n_experts))
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_ffn(ctx: AxisCtx, w: dict, x, cfg: ModelConfig,
+            *, tokens_replicated: bool = False):
+    """x: (B, T_loc, D) local tokens. w: router full; w1/w3/w2 LOCAL shards.
+
+    ep_mode="model": expert shards (E/M, D, F) over the model axis.
+    ep_mode="grid":  expert shards (E/R, D, F/M) over data x model.
+    Returns (out, MoEAux)."""
+    m = cfg.moe
+    B, T_loc, D = x.shape
+    E, K = m.n_experts, m.top_k
+    ep_axis = ctx.model if m.ep_mode == "model" else ctx.data
+    R = ctx.size(ep_axis)
+    E_row = E // R
+    xf = x.reshape(B * T_loc, D)
+    T = xf.shape[0]
+    if m.ep_mode == "subgrid":
+        return _moe_subgrid(ctx, w, xf, cfg, B, T_loc,
+                            tokens_replicated=tokens_replicated)
+
+    # --- routing (f32) -------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ w["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, K)                    # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (GShard-style)
+    me = probs.mean(0)                                       # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eids.reshape(-1)].add(1.0) / (T * K)
+    load_balance = E * jnp.sum(me * ce) * m.load_balance_loss
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2) * m.router_z_loss
+
+    # --- capacity bucketing --------------------------------------------
+    C = capacity(T, K, E, m.capacity_factor)
+    flat_e = eids.reshape(-1)                                # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos, flat_e[:, None], 1)[:, 0]  # slot in expert
+    keep = pos < C
+    drop_fraction = 1.0 - keep.mean()
+    slot = jnp.where(keep, flat_e * (C + 1) + pos, flat_e * (C + 1) + C)
+    buf = jnp.zeros((E * (C + 1), D), x.dtype)
+    buf = buf.at[slot].set(jnp.repeat(xf, K, axis=0))
+    buf = buf.reshape(E, C + 1, D)[:, :C]                    # (E, C, D)
+
+    # --- dispatch collectives ------------------------------------------
+    if ep_axis is not None:
+        b = buf.reshape(R, E_row, C, D)
+        b = ctx.all_to_all(b, ep_axis, split_axis=0, concat_axis=0)
+        buckets = jnp.moveaxis(b, 0, 1).reshape(E_row, R * C, D)
+    else:
+        buckets = buf.reshape(E_row, R * C, D)
+    grid_mode = m.ep_mode == "grid" and ctx.model is not None
+
+    def expert_ffn(toks):
+        g = jnp.einsum("ecd,edf->ecf", toks, w["w1"])
+        u = jnp.einsum("ecd,edf->ecf", toks, w["w3"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("ecf,efd->ecd", h, w["w2"])
+
+    if grid_mode and not tokens_replicated:
+        # Ring-chunked expert compute: the expert FFN dim is model-sharded,
+        # so every token needs every F-shard. Instead of all-gathering the
+        # (E_row, M*R*C, D) token buckets (token replication x M — hundreds
+        # of GiB for jamba), each chip's chunk CIRCULATES around the model
+        # ring; each hop applies the local F-slice and accumulates into the
+        # traveling output. After M hops the chunk is home, fully combined.
+        # Same total bytes as AG+reduce-scatter, O(1/M) live memory, and the
+        # per-hop ppermute overlaps with the matmul.
+        #
+        # REPRO_QUANT_RING=1 (EXPERIMENTS.md §Perf, jamba): circulate int8
+        # payloads with per-token scales — visit is quantized ONCE (no
+        # re-quantization error); the traveling accumulator is requantized
+        # each hop (error ~0.4%/hop of row max, flag-gated).
+        import os
+        M = ctx.size(ctx.model)
+        perm = [(i, (i + 1) % M) for i in range(M)]
+        quant_ring = os.environ.get("REPRO_QUANT_RING") == "1"
+
+        def q8(t):
+            amax = jnp.max(jnp.abs(t.astype(jnp.float32)), -1, keepdims=True)
+            sc = jnp.where(amax > 0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.round(t.astype(jnp.float32) / sc),
+                         -127, 127).astype(jnp.int8)
+            return q, sc.astype(jnp.float32)
+
+        def dq(q, sc, dt):
+            return (q.astype(jnp.float32) * sc).astype(dt)
+
+        if quant_ring:
+            vq, vs = q8(buckets)
+
+            def hop(carry, _):
+                vq_, vs_, aq, asc = carry
+                visit = dq(vq_, vs_, buckets.dtype)
+                acc = dq(aq, asc, jnp.float32) + expert_ffn(visit) \
+                    .astype(jnp.float32)
+                aq2, as2 = q8(acc)
+                return (ctx.ppermute(vq_, ctx.model, perm),
+                        ctx.ppermute(vs_, ctx.model, perm),
+                        ctx.ppermute(aq2, ctx.model, perm),
+                        ctx.ppermute(as2, ctx.model, perm)), None
+
+            aq0, as0 = q8(jnp.zeros_like(buckets))
+            (_, _, aq, asc), _ = jax.lax.scan(hop, (vq, vs, aq0, as0),
+                                              None, length=M)
+            part = dq(aq, asc, buckets.dtype)
+        else:
+            def hop(carry, _):
+                visit, acc = carry
+                acc = acc + expert_ffn(visit)
+                visit = ctx.ppermute(visit, ctx.model, perm)
+                acc = ctx.ppermute(acc, ctx.model, perm)
+                return (visit, acc), None
+
+            acc0 = jnp.zeros_like(buckets)
+            (_, part), _ = jax.lax.scan(hop, (buckets, acc0), None, length=M)
+    else:
+        part = expert_ffn(buckets)
+        if grid_mode:                     # decode: tokens replicated over M
+            part = ctx.psum(part, ctx.model)
+
+    if ep_axis is not None:
+        p = jnp.moveaxis(part.reshape(E_row, R, C, D), 1, 0)
+        p = ctx.all_to_all(p, ep_axis, split_axis=0, concat_axis=0)
+        out_buf = p.reshape(E, C, D)
+    else:
+        out_buf = part.reshape(E, C, D)
+
+    # --- weighted un-permute --------------------------------------------
+    flat_idx = jnp.minimum(flat_e * C + pos, E * C - 1)
+    tok = out_buf.reshape(E * C, D)[flat_idx]                # (T*K, D)
+    tok = tok * (keep * gates.reshape(-1)).astype(tok.dtype)[:, None]
+    out = tok.reshape(T, K, D).sum(1).reshape(B, T_loc, D)
+    return out, MoEAux(load_balance, z_loss, drop_fraction)
+
+
+def _moe_subgrid(ctx: AxisCtx, w: dict, xf, cfg: ModelConfig, B, T_loc,
+                 *, tokens_replicated: bool = False):
+    """Sub-grid EP (the arctic hillclimb; EXPERIMENTS.md §Perf).
+
+    Weights are stored (E*f_sub, D, F/f_sub) sharded over the flattened
+    (data x model) grid: chip (r, m) holds FFN slice (m % f_sub) of expert
+    (r * M/f_sub + m // f_sub). Communication per layer:
+
+      data-a2a (row dispatch)  ->  model-a2a with f_sub-fold duplication
+      -> local grouped matmul  ->  butterfly XOR partial-sum (log2 f_sub
+      ppermute+add steps)      ->  reverse a2a's.
+
+    vs the ring: bytes drop from 2*(M-1)*bucket to ~(2 + f_sub)*bucket —
+    ~6.5x for arctic (f_sub=2) — because tokens only visit the f_sub chips
+    that actually hold their expert, not all M F-shards.
+    """
+    m = cfg.moe
+    E, K, fs = m.n_experts, m.top_k, m.f_sub
+    D = xf.shape[-1]
+    T = xf.shape[0]
+    R = ctx.size(ctx.data)
+    M = ctx.size(ctx.model)
+    E_row = E // R
+    if ctx.model is not None:
+        assert E_row * fs == M, \
+            f"subgrid needs E/data*f_sub == model ({E_row}*{fs} != {M})"
+
+    # --- routing + capacity bucketing (same as the generic path) --------
+    logits = xf.astype(jnp.float32) @ w["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[eids.reshape(-1)].add(1.0) / (T * K)
+    load_balance = E * jnp.sum(me * ce) * m.load_balance_loss
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2) * m.router_z_loss
+    C = capacity(T, K, E, m.capacity_factor)
+    flat_e = eids.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos, flat_e[:, None], 1)[:, 0]
+    keep = pos < C
+    drop_fraction = 1.0 - keep.mean()
+    slot = jnp.where(keep, flat_e * (C + 1) + pos, flat_e * (C + 1) + C)
+    buf = jnp.zeros((E * (C + 1), D), xf.dtype)
+    buf = buf.at[slot].set(jnp.repeat(xf, K, axis=0))
+    buf = buf.reshape(E, C + 1, D)[:, :C]                     # (E, C, D)
+
+    if ctx.model is None:
+        # single-device oracle: reassemble (E, D, F) from the packed slices
+        def full(t, transpose=False):
+            if transpose:   # w2 (E*fs, F/fs, D) -> (E, F, D)
+                return t.reshape(E, fs, -1, D).reshape(E, -1, D)
+            return jnp.moveaxis(t.reshape(E, fs, D, -1), 1, 2) \
+                .reshape(E, D, -1)
+        g = jnp.einsum("ecd,edf->ecf", buf, full(w["w1"]))
+        u = jnp.einsum("ecd,edf->ecf", buf, full(w["w3"]))
+        part = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                          full(w["w2"], transpose=True))
+        out_buf = part
+    else:
+        # dispatch to expert rows
+        b = buf.reshape(R, E_row, C, D)
+        b = ctx.all_to_all(b, ctx.data, split_axis=0, concat_axis=0)
+        buckets = jnp.moveaxis(b, 0, 1).reshape(E_row, R * C, D)
+        if tokens_replicated:
+            # decode: buckets identical on all model chips; each chip runs
+            # its (expert, slice), psum combines slices AND fills slots.
+            idx = ctx.index(ctx.model)
+            mine = buckets[idx // fs]                           # (R*C, D)
+            g = mine @ w["w1"][0]
+            u = mine @ w["w3"][0]
+            part_own = (jax.nn.silu(g) * u) @ w["w2"][0]        # (R*C, D)
+            part = jnp.zeros_like(buckets)
+            part = jax.lax.dynamic_update_index_in_dim(
+                part, part_own, idx // fs, axis=0)
+            part = ctx.psum(part, ctx.model)
+        else:
+            # duplicate each expert's bucket to its f_sub slice-holders
+            visit = jnp.repeat(buckets, fs, axis=0)             # (M, R*C, D)
+            visit = ctx.all_to_all(visit, ctx.model, split_axis=0,
+                                   concat_axis=0)               # (M, R*C, D)
+            toks = visit.reshape(M * R * C, D)
+            g = toks @ w["w1"][0]                               # (MRC, F/fs)
+            u = toks @ w["w3"][0]
+            partial = (jax.nn.silu(g) * u) @ w["w2"][0]         # (MRC, D)
+            # butterfly partial-sum within each f_sub-aligned group
+            k = 1
+            while k < fs:
+                perm = [(i, i ^ k) for i in range(M)]
+                partial = partial + ctx.ppermute(partial, ctx.model, perm)
+                k *= 2
+            # reverse a2a; halves carry identical sums -> take every fs-th
+            back = ctx.all_to_all(partial.reshape(M, R * C, D), ctx.model,
+                                  split_axis=0, concat_axis=0)
+            part = back[::fs]                                   # (E_row,R*C,D)
+        p = jnp.moveaxis(part.reshape(E_row, R, C, D), 1, 0)
+        p = ctx.all_to_all(p, ctx.data, split_axis=0, concat_axis=0)
+        out_buf = p.reshape(E, C, D)
+
+    flat_idx = jnp.minimum(flat_e * C + pos, E * C - 1)
+    tok = out_buf.reshape(E * C, D)[flat_idx]
+    tok = tok * (keep * gates.reshape(-1)).astype(tok.dtype)[:, None]
+    out = tok.reshape(T, K, D).sum(1).reshape(B, T_loc, D)
+    return out, MoEAux(load_balance, z_loss, drop_fraction)
+
+
+def moe_ffn_dense_ref(w_full: dict, x, cfg: ModelConfig):
+    """Dense masked reference (no capacity drops): every token runs its top-k
+    experts exactly. O(E) compute — tests only."""
+    m = cfg.moe
+    B, T, D = x.shape
+    xf = x.reshape(B * T, D)
+    logits = xf.astype(jnp.float32) @ w_full["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gates, eids = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    g = jnp.einsum("td,edf->tef", xf, w_full["w1"])
+    u = jnp.einsum("td,edf->tef", xf, w_full["w3"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tef,efd->ted", h, w_full["w2"])          # (T, E, D)
+    mask = jnp.zeros((xf.shape[0], m.n_experts), jnp.float32)
+    mask = mask.at[jnp.arange(xf.shape[0])[:, None], eids].add(gates)
+    out = jnp.einsum("te,ted->td", mask, y)
+    return out.reshape(B, T, D).astype(x.dtype)

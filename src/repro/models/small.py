@@ -1,0 +1,117 @@
+"""The paper's own experiment models: 3-conv CNN, 4-hidden MLP, logreg.
+
+These are classification models over image-shaped inputs — the workloads of
+the paper's Figures 8-12. They implement the same Model-ish API surface
+(init / loss / predict) and are pytree-generic so every FL strategy works on
+them unchanged (RQ2: model agnosticism).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.axes import AxisCtx
+
+CIFAR_SHAPE = (32, 32, 3)
+MNIST_SHAPE = (28, 28, 1)
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallModel:
+    cfg: ModelConfig
+    kind: str                     # cnn | mlp | logreg
+
+    def init(self, key, dtype=jnp.float32):
+        ks = jax.random.split(key, 12)
+        C = self.cfg.vocab_size   # num classes
+        if self.kind == "cnn":
+            ch = self.cfg.d_model                        # 64
+            p = {
+                "c1": dense_init(ks[0], (3, 3, 3, ch // 2), 27, dtype),
+                "b1": jnp.zeros((ch // 2,), dtype),
+                "c2": dense_init(ks[1], (3, 3, ch // 2, ch), 9 * ch // 2, dtype),
+                "b2": jnp.zeros((ch,), dtype),
+                "c3": dense_init(ks[2], (3, 3, ch, ch), 9 * ch, dtype),
+                "b3": jnp.zeros((ch,), dtype),
+                "fc": dense_init(ks[3], (4 * 4 * ch, self.cfg.d_ff), 4 * 4 * ch, dtype),
+                "fb": jnp.zeros((self.cfg.d_ff,), dtype),
+                "out": dense_init(ks[4], (self.cfg.d_ff, C), self.cfg.d_ff, dtype),
+                "ob": jnp.zeros((C,), dtype),
+            }
+        elif self.kind == "mlp":
+            d_in = int(np.prod(CIFAR_SHAPE))
+            h = self.cfg.d_model
+            p = {"w0": dense_init(ks[0], (d_in, h), d_in, dtype),
+                 "b0": jnp.zeros((h,), dtype)}
+            for i in range(1, self.cfg.n_layers):
+                p[f"w{i}"] = dense_init(ks[i], (h, h), h, dtype)
+                p[f"b{i}"] = jnp.zeros((h,), dtype)
+            p["out"] = dense_init(ks[10], (h, C), h, dtype)
+            p["ob"] = jnp.zeros((C,), dtype)
+        else:  # logreg
+            d_in = self.cfg.d_model                      # 784
+            p = {"w": jnp.zeros((d_in, C), dtype), "b": jnp.zeros((C,), dtype)}
+        return p
+
+    def logits(self, params, x):
+        if self.kind == "cnn":
+            h = x
+            for i, name in enumerate(["c1", "c2", "c3"]):
+                h = _conv(h, params[name], params[f"b{i + 1}"])
+                h = jax.nn.relu(h)
+                h = jax.lax.reduce_window(
+                    h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+            h = h.reshape(h.shape[0], -1)
+            h = jax.nn.relu(h @ params["fc"] + params["fb"])
+            return h @ params["out"] + params["ob"]
+        if self.kind == "mlp":
+            h = x.reshape(x.shape[0], -1)
+            for i in range(self.cfg.n_layers):
+                h = jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+            return h @ params["out"] + params["ob"]
+        h = x.reshape(x.shape[0], -1)
+        return h @ params["w"] + params["b"]
+
+    def loss(self, ctx: AxisCtx, params, batch, gather_fn=lambda b: b):
+        lg = self.logits(params, batch["x"]).astype(jnp.float32)
+        lp = jax.nn.log_softmax(lg, -1)
+        nll = -jnp.take_along_axis(lp, batch["y"][:, None], 1).mean()
+        nll = ctx.pmean(nll, ctx.data_axes)
+        return nll, {"loss": nll}
+
+    def accuracy(self, params, batch):
+        lg = self.logits(params, batch["x"])
+        return (jnp.argmax(lg, -1) == batch["y"]).mean()
+
+    def shapes(self):
+        p = self.init(jax.random.PRNGKey(0))
+        return jax.tree.map(lambda t: t.shape, p)
+
+
+def build_small(cfg: ModelConfig) -> SmallModel:
+    kind = {"flsim-cnn": "cnn", "flsim-mlp": "mlp",
+            "flsim-logreg": "logreg"}[cfg.name]
+    return SmallModel(cfg, kind)
+
+
+def count_small_params(cfg: ModelConfig) -> int:
+    m = build_small(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    return sum(int(np.prod(t.shape)) for t in jax.tree.leaves(p))
+
+
+def input_shape(cfg: ModelConfig):
+    return MNIST_SHAPE if cfg.name == "flsim-logreg" else CIFAR_SHAPE

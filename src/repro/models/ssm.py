@@ -1,0 +1,386 @@
+"""State-space / recurrent blocks: Mamba (S6 selective scan) and xLSTM.
+
+TPU adaptation: the CUDA selective-scan kernel the Mamba paper ships has no
+TPU analogue — we use a *chunked* scan: within a chunk of Q timesteps the
+recurrence is materialized with cumulative log-decays (VMEM-sized tensors,
+MXU-friendly einsums); chunks are threaded sequentially via ``lax.scan`` with
+an (B, d_inner, N) carry. The mLSTM uses the same chunkwise-parallel trick
+(matrix memory carried across chunks); the sLSTM is an inherently sequential
+``lax.scan`` over time (that is its nature per the xLSTM paper).
+
+All blocks support decode (single-step recurrence with carried state), which
+is what makes these archs run long_500k (state size independent of context).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+# ---------------------------------------------------------------------------
+# Mamba (S6)
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray        # (B, d_inner, N) ssm state
+    conv: jnp.ndarray     # (B, d_conv - 1, d_inner) rolling conv inputs
+
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = int(s.expand * cfg.d_model)
+    dt_rank = s.dt_rank or max(1, cfg.d_model // 16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def mamba_param_shapes(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_inner, dt_rank, N, d_conv = mamba_dims(cfg)
+    return {
+        "in_proj_x": (D, d_inner),
+        "in_proj_z": (D, d_inner),
+        "conv_w": (d_conv, d_inner),
+        "conv_b": (d_inner,),
+        "x_proj": (d_inner, dt_rank + 2 * N),
+        "dt_proj": (dt_rank, d_inner),
+        "dt_bias": (d_inner,),
+        "A_log": (d_inner, N),
+        "D_skip": (d_inner,),
+        "out_proj": (d_inner, D),
+    }
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    shapes = mamba_param_shapes(cfg)
+    ks = jax.random.split(key, len(shapes))
+    d_inner, dt_rank, N, _ = mamba_dims(cfg)
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), ks):
+        if name == "A_log":
+            out[name] = jnp.log(jnp.broadcast_to(
+                jnp.arange(1, N + 1, dtype=jnp.float32), shape)).astype(dtype)
+        elif name == "D_skip":
+            out[name] = jnp.ones(shape, dtype)
+        elif name in ("conv_b", "dt_bias"):
+            out[name] = jnp.zeros(shape, dtype)
+        else:
+            out[name] = dense_init(k, shape, in_dim=shape[0], dtype=dtype)
+    return out
+
+
+def _mamba_chunk(h0, xc, dtc, Bc, Cc, A):
+    """One chunk of the selective scan via a stable associative scan.
+
+    h0: (B, d, N); xc: (B, Q, d); dtc: (B, Q, d); Bc/Cc: (B, Q, N); A: (d, N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = <C_t, h_t>.
+    Decay factors a_t = exp(dt_t A) are in (0, 1], so the associative combine
+    (a_l a_r, b_l a_r + b_r) never overflows (unlike cumulative log-decay
+    ratios, which blow up past ~exp(88) in f32).
+    """
+    a = jnp.exp(dtc[..., None] * A[None, None])             # (B,Q,d,N) in (0,1]
+    b = jnp.einsum("bqd,bqn->bqdn", dtc * xc, Bc)           # (B,Q,d,N)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+    h_all = bb + aa * h0[:, None]                           # (B,Q,d,N)
+    y = jnp.einsum("bqdn,bqn->bqd", h_all, Cc)
+    return h_all[:, -1], y
+
+
+def mamba_forward(w: dict, x, cfg: ModelConfig, state: MambaState | None = None,
+                  ctx=None, tp: bool = False):
+    """x: (B, S, D). Returns (y (B,S,D), final MambaState). f32 scan math.
+
+    Sequence sharding (``ctx`` with a model axis, tp=False): the recurrence
+    crosses shard boundaries, handled in two linear passes — (1) local scan
+    with h0=0, (2) exchange per-shard (h_last, total-decay) summaries
+    (all-gather, KBs) and add the correction ``C_t exp(cum_t) h0_true`` by
+    re-running the chunk scan with zero inputs. The depthwise conv gets its
+    boundary rows from the left neighbour via ppermute.
+
+    TP decode (tp=True): d_inner is model-sharded (column weights local);
+    x_proj / out_proj are row-parallel with tiny psums.
+    """
+    s = cfg.ssm
+    B, S, D = x.shape
+    d_inner, dt_rank, N, d_conv = mamba_dims(cfg)
+    # chunk sized so the (B, Q, d, N) scan transient stays ~<=128 MB f32
+    budget = max(1, (32 * 1024 * 1024) // max(1, B * d_inner * N))
+    Q = min(s.chunk, S, budget)
+    while S % Q:
+        Q -= 1
+    seq_sharded = (ctx is not None and ctx.model is not None and not tp
+                   and state is None)
+
+    xi = x @ w["in_proj_x"]
+    z = x @ w["in_proj_z"]
+    d_loc = xi.shape[-1]                                     # d_inner or /M
+
+    # depthwise causal conv over time (boundary rows from left neighbour)
+    if state is not None:
+        prev = state.conv.astype(xi.dtype)
+    elif seq_sharded:
+        M = ctx.size(ctx.model)
+        tail = xi[:, -(d_conv - 1):]
+        prev = ctx.ppermute(tail, ctx.model,
+                            [(i, i + 1) for i in range(M - 1)])
+    else:
+        prev = jnp.zeros((B, d_conv - 1, d_loc), xi.dtype)
+    xpad = jnp.concatenate([prev, xi], axis=1)
+    conv = sum(xpad[:, i:i + S] * w["conv_w"][i][None, None]
+               for i in range(d_conv))
+    xi = jax.nn.silu(conv + w["conv_b"])
+    new_conv = xpad[:, -(d_conv - 1):]                       # rolling window
+
+    # input-dependent dt, B, C
+    proj = (xi @ w["x_proj"]).astype(jnp.float32)
+    if tp and ctx is not None:
+        proj = ctx.psum(proj, ctx.model)                     # row-parallel
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ w["dt_proj"].astype(jnp.float32)
+                         + w["dt_bias"].astype(jnp.float32))  # (B,S,d_loc)
+    Bmat = proj[..., dt_rank:dt_rank + N]
+    Cmat = proj[..., dt_rank + N:]
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))             # (d_loc,N)
+
+    xif = xi.astype(jnp.float32)
+    h0 = (jnp.zeros((B, d_loc, N), jnp.float32)
+          if state is None else state.h.astype(jnp.float32))
+
+    nchunk = S // Q
+    xc = jnp.moveaxis(xif.reshape(B, nchunk, Q, d_loc), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, nchunk, Q, d_loc), 1, 0)
+    Bc = jnp.moveaxis(Bmat.reshape(B, nchunk, Q, N), 1, 0)
+    Cc = jnp.moveaxis(Cmat.reshape(B, nchunk, Q, N), 1, 0)
+
+    def step(h, xs):
+        xq, dtq, bq, cq = xs
+        h_new, y = _mamba_chunk(h, xq, dtq, bq, cq, A)
+        return h_new, y
+
+    # remat the chunk body: scan-AD then saves only the (B,d,N) carry per
+    # chunk instead of the (B,Q,d,N) associative-scan internals.
+    step = jax.checkpoint(step)
+    h_fin, ys = jax.lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_loc)
+
+    if seq_sharded:
+        # cross-shard state handoff: shard m needs h0 = state after shard m-1
+        M = ctx.size(ctx.model)
+        logdecay_tot = dt.sum(axis=1)[..., None] * A[None]   # (B,d,N)
+        summ = jnp.stack([h_fin, logdecay_tot], 0)           # (2,B,d,N)
+        allsum = ctx.all_gather(summ[None], ctx.model, axis=0)  # (M,2,B,d,N)
+
+        def combine(carry, sm):
+            h_run = carry
+            h_last_j, ld_j = sm[0], sm[1]
+            out = h_run                                       # h0 for shard j
+            h_run = jnp.exp(ld_j) * h_run + h_last_j
+            return h_run, out
+
+        h_run, h0s = jax.lax.scan(combine, jnp.zeros_like(h_fin), allsum)
+        h0_true = h0s[ctx.index(ctx.model)]
+        # correction pass: same scan with zero inputs picks up C_t e^{cum} h0
+        _, ys_corr = jax.lax.scan(step, h0_true,
+                                  (jnp.zeros_like(xc), dtc, Bc, Cc))
+        y = y + jnp.moveaxis(ys_corr, 0, 1).reshape(B, S, d_loc)
+        h_fin = h_run                                         # global final
+
+    y = y + xif * w["D_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ w["out_proj"]
+    if tp and ctx is not None:
+        out = ctx.psum(out, ctx.model)
+    return out, MambaState(h_fin.astype(jnp.float32), new_conv.astype(x.dtype))
+
+
+def mamba_decode(w: dict, x, cfg: ModelConfig, state: MambaState,
+                 ctx=None, tp: bool = False):
+    """Single-token step. x: (B, 1, D); state channels model-sharded when tp."""
+    return mamba_forward(w, x, cfg, state=state, ctx=ctx, tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunkwise-parallel) and sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray        # (B, H, dv, dk) matrix memory
+    n: jnp.ndarray        # (B, H, dk) normalizer
+    m: jnp.ndarray        # (B, H) max-stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray        # (B, d)
+    n: jnp.ndarray        # (B, d)
+    h: jnp.ndarray        # (B, d)
+    m: jnp.ndarray        # (B, d)
+
+
+def xlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.ssm.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    return d_in, H, d_in // H
+
+
+def mlstm_param_shapes(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_in, H, dh = xlstm_dims(cfg)
+    return {
+        "up_proj": (D, 2 * d_in),
+        "wq": (d_in, d_in),
+        "wk": (d_in, d_in),
+        "wv": (d_in, d_in),
+        "wif": (d_in, 2 * H),        # input & forget gate pre-activations
+        "o_norm": (d_in,),
+        "down_proj": (d_in, D),
+    }
+
+
+def slstm_param_shapes(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "wx": (D, 4 * D),            # i, f, z, o from input
+        "rh": (D, 4 * D),            # recurrent
+        "b": (4 * D,),
+        "ff1": (D, int(cfg.ssm.proj_factor * D)),
+        "ff2": (int(cfg.ssm.proj_factor * D), D),
+    }
+
+
+def _init_from_shapes(key, shapes, dtype):
+    ks = jax.random.split(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), ks):
+        if name.endswith("norm"):
+            out[name] = jnp.ones(shape, dtype)
+        elif name == "b":
+            out[name] = jnp.zeros(shape, dtype)
+        else:
+            out[name] = dense_init(k, shape, in_dim=shape[0], dtype=dtype)
+    return out
+
+
+def init_mlstm_params(key, cfg, dtype=jnp.float32):
+    return _init_from_shapes(key, mlstm_param_shapes(cfg), dtype)
+
+
+def init_slstm_params(key, cfg, dtype=jnp.float32):
+    return _init_from_shapes(key, slstm_param_shapes(cfg), dtype)
+
+
+def mlstm_forward(w: dict, x, cfg: ModelConfig, state: MLSTMState | None = None):
+    """Chunkwise-parallel mLSTM. x: (B, S, D) -> (y, state).
+
+    Exponential-gated linear attention with matrix memory (xLSTM eq. 19-27),
+    evaluated chunk-by-chunk: intra-chunk = masked attention in the chunk,
+    inter-chunk = decayed matrix-memory carry.
+    """
+    B, S, D = x.shape
+    d_in, H, dh = xlstm_dims(cfg)
+    Q = min(cfg.ssm.chunk, S)
+    while S % Q:
+        Q -= 1
+    nchunk = S // Q
+
+    up = x @ w["up_proj"]
+    u, z = jnp.split(up, 2, axis=-1)                          # (B,S,d_in)
+    q = (u @ w["wq"]).reshape(B, S, H, dh) / np.sqrt(dh)
+    k = (u @ w["wk"]).reshape(B, S, H, dh) / np.sqrt(dh)
+    v = (u @ w["wv"]).reshape(B, S, H, dh)
+    gates = (u @ w["wif"]).astype(jnp.float32)                # (B,S,2H)
+    logi = gates[..., :H]                                     # input gate (log)
+    logf = jax.nn.log_sigmoid(gates[..., H:])                 # forget gate (log)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, xs):
+        C, n, mprev, = carry
+        qc, kc, vc, lic, lfc = xs                             # (B,Q,H,*)
+        lf_cum = jnp.cumsum(lfc, axis=1)                      # (B,Q,H)
+        # stabilizer per position: m_t = max(m_prev + lf_cum, max_s<=t(...))
+        a = lf_cum[:, :, None] - lf_cum[:, None, :] + lic[:, None, :]
+        qpos = jnp.arange(Q)
+        causal = qpos[:, None] >= qpos[None, :]
+        a = jnp.where(causal[None, :, :, None], a, -1e30)     # (B,Q,Q,H)
+        inter_m = mprev[:, None] + lf_cum                     # (B,Q,H)
+        intra_m = a.max(axis=2)
+        m_t = jnp.maximum(inter_m, intra_m)                   # (B,Q,H)
+        # intra-chunk weights
+        wgt = jnp.exp(a - m_t[:, :, None])                    # (B,Q,Q,H)
+        s = jnp.einsum("bqhd,bshd->bqsh", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32))
+        intra_num = jnp.einsum("bqsh,bqsh,bshd->bqhd", s, wgt,
+                               vc.astype(jnp.float32))
+        intra_den = jnp.einsum("bqsh,bqsh->bqh", s, wgt)
+        # inter-chunk: decayed memory read
+        decay = jnp.exp(inter_m - m_t)                        # (B,Q,H)
+        inter_num = jnp.einsum("bqhd,bhed->bqhe", qc.astype(jnp.float32), C)
+        inter_den = jnp.einsum("bqhd,bhd->bqh", qc.astype(jnp.float32), n)
+        num = intra_num + inter_num * decay[..., None]
+        den = jnp.abs(intra_den + inter_den * decay)
+        y = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        # memory update to end of chunk
+        m_end = m_t[:, -1]
+        wk = jnp.exp(lf_cum[:, -1:, :] - lf_cum + lic - m_end[:, None])
+        C_new = (C * jnp.exp(mprev + lf_cum[:, -1] - m_end)[..., None, None]
+                 + jnp.einsum("bsh,bshd,bshe->bhde", wk,
+                              vc.astype(jnp.float32), kc.astype(jnp.float32)))
+        n_new = (n * jnp.exp(mprev + lf_cum[:, -1] - m_end)[..., None]
+                 + jnp.einsum("bsh,bshd->bhd", wk, kc.astype(jnp.float32)))
+        return (C_new, n_new, m_end), y
+
+    qc = jnp.moveaxis(q.reshape(B, nchunk, Q, H, dh), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nchunk, Q, H, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nchunk, Q, H, dh), 1, 0)
+    lic = jnp.moveaxis(logi.reshape(B, nchunk, Q, H), 1, 0)
+    lfc = jnp.moveaxis(logf.reshape(B, nchunk, Q, H), 1, 0)
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_in).astype(x.dtype)
+    y = y * w["o_norm"]
+    y = y * jax.nn.silu(z)
+    return y @ w["down_proj"], MLSTMState(C, n, m)
+
+
+def slstm_forward(w: dict, x, cfg: ModelConfig, state: SLSTMState | None = None):
+    """Sequential sLSTM with exponential gating + small FFN. x: (B,S,D)."""
+    B, S, D = x.shape
+    if state is None:
+        z0 = jnp.zeros((B, D), jnp.float32)
+        state = SLSTMState(z0, z0, z0, jnp.full((B, D), -1e30, jnp.float32))
+
+    wx = (x @ w["wx"]).astype(jnp.float32)                    # (B,S,4D)
+
+    def step(st, xt):
+        c, n, h, m = st
+        pre = xt + h @ w["rh"].astype(jnp.float32) + w["b"].astype(jnp.float32)
+        i_, f_, z_, o_ = jnp.split(pre, 4, axis=-1)
+        logf = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(logf + m, i_)
+        i_g = jnp.exp(i_ - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1e-6)
+        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+    st, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                # (B,S,D)
+    y = jax.nn.gelu(h @ w["ff1"]) @ w["ff2"]
+    return y, st

@@ -1,0 +1,740 @@
+"""Model assembly for every assigned architecture family.
+
+One code path serves three phases:
+- ``train``   — loss + grads; activations sequence-sharded over ``model``
+                (SP), batch over ``pod``/``data``; weights ZeRO-3: stored
+                model-sharded, all-gathered per layer inside the layer scan.
+- ``prefill`` — forward-only train path emitting sequence-sharded KV caches.
+- ``decode``  — one token; TP-resident weights, chunk-parallel cache attention.
+
+Everything is written against an AxisCtx, so with AxisCtx() the same code is
+an ordinary single-device model (the oracle for tests).
+
+Embeddings / LM heads are vocab-sharded over ``model``: lookup is a masked
+local take + psum, logits stay local-V, and the softmax-xent is computed
+distributed (pmax/psum over the vocab shards) — the full (B,S,V) logits tensor
+never exists on one chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed_init, layer_norm, rms_norm)
+from repro.sharding.axes import AxisCtx
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_param_shapes(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.family == "encdec":   # whisper: 2-matrix GELU MLP with biases
+        return {"w1": (D, F), "b1": (F,), "w2": (F, D), "b2": (D,)}
+    return {"w1": (D, F), "w3": (D, F), "w2": (F, D)}
+
+
+def mlp_forward(ctx: AxisCtx, w: dict, x, cfg: ModelConfig, *, tp: bool = False):
+    if "w3" in w:
+        g = attn.col_matmul(ctx, x, w["w1"], None, tp)
+        u = attn.col_matmul(ctx, x, w["w3"], None, tp)
+        return attn.row_matmul(ctx, jax.nn.silu(g) * u, w["w2"], tp)
+    h = jax.nn.gelu(attn.col_matmul(ctx, x, w["w1"], w["b1"], tp))
+    return attn.row_matmul(ctx, h, w["w2"], tp) + w["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / loss (vocab-sharded over `model`)
+# ---------------------------------------------------------------------------
+
+def embed_lookup(ctx: AxisCtx, embed_loc, tokens, *, tied: bool = False,
+                 tokens_replicated: bool = False, out_dtype=None):
+    """Input-side embedding under sharding.
+
+    Untied: ``embed_loc`` is (V, D_loc) D-sharded — every chip looks up its
+    OWN (possibly sequence-sharded) token rows locally, then the feature dim
+    is all-gathered (S_loc x D bytes — tiny). Correct for arbitrary token
+    sharding, unlike a vocab-shard mask+psum (which would sum different
+    positions across shards).
+
+    Tied (vocab-sharded (V_loc, D), shared with the LM head): when tokens
+    are replicated over the vocab axis (decode) a masked lookup + psum is
+    exact; otherwise the caller must pass the pre-gathered full matrix.
+    """
+    if tied:
+        V = embed_loc.shape[0]
+        if tokens_replicated and ctx.vaxis is not None:
+            off = ctx.index(ctx.vaxis) * V
+            ids = tokens - off
+            ok = (ids >= 0) & (ids < V)
+            x = embed_loc[jnp.clip(ids, 0, V - 1)] \
+                * ok[..., None].astype(embed_loc.dtype)
+            x = ctx.psum(x.astype(jnp.float32), ctx.vaxis)
+        else:
+            x = embed_loc[tokens]       # full matrix (gathered by caller)
+        return x.astype(out_dtype or embed_loc.dtype)
+    x = embed_loc[tokens]               # (B, S_loc, D_loc)
+    x = ctx.all_gather(x, ctx.vaxis, axis=x.ndim - 1)
+    return x.astype(out_dtype or embed_loc.dtype)
+
+
+def softmax_xent_vshard(ctx: AxisCtx, logits_loc, labels, valid=None):
+    """Distributed stable cross-entropy. logits_loc: (B, S, V_loc) f32;
+    labels: (B, S) global ids. Returns mean loss over valid tokens."""
+    V_loc = logits_loc.shape[-1]
+    off = ctx.index(ctx.vaxis) * V_loc
+    m = jax.lax.stop_gradient(logits_loc.max(-1))
+    if ctx.vaxis is not None:
+        m = jax.lax.pmax(m, ctx.vaxis)
+    m = jax.lax.stop_gradient(m)  # stabilizer only; lse grads are m-invariant
+    se = jnp.exp(logits_loc - m[..., None]).sum(-1)
+    se = ctx.psum(se, ctx.vaxis)
+    lse = m + jnp.log(se)
+    ids = labels - off
+    ok = (ids >= 0) & (ids < V_loc)
+    tgt = jnp.take_along_axis(
+        logits_loc, jnp.clip(ids, 0, V_loc - 1)[..., None], -1)[..., 0]
+    tgt = ctx.psum(tgt * ok, ctx.vaxis)
+    nll = lse - tgt
+    if valid is None:
+        valid = jnp.ones_like(nll)
+    loss = (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+    return ctx.pmean(loss, tuple(a for a in (ctx.pod, ctx.data) if a))
+
+
+# ---------------------------------------------------------------------------
+# Block parameter construction
+# ---------------------------------------------------------------------------
+
+def _norm_shapes(cfg):
+    if cfg.family == "encdec":
+        return {"w": (cfg.d_model,), "b": (cfg.d_model,)}
+    return {"w": (cfg.d_model,)}
+
+
+def _apply_norm(w, x, cfg):
+    if "b" in w:
+        return layer_norm(x, w["w"], w["b"], eps=1e-5)
+    return rms_norm(x, w["w"], cfg.norm_eps)
+
+
+def dense_block_shapes(cfg: ModelConfig) -> dict:
+    s = {"ln1": _norm_shapes(cfg), "ln2": _norm_shapes(cfg),
+         "attn": attn.attn_param_shapes(cfg)}
+    if cfg.moe is not None and cfg.family == "moe":
+        s["moe"] = moe_mod.moe_param_shapes(cfg)
+        if cfg.moe.dense_residual_d_ff:
+            s["dense_mlp"] = mlp_param_shapes(cfg, cfg.moe.dense_residual_d_ff)
+            s["ln3"] = _norm_shapes(cfg)
+    else:
+        s["mlp"] = mlp_param_shapes(cfg)
+    return s
+
+
+def hybrid_period_shapes(cfg: ModelConfig) -> dict:
+    """Jamba period: 1 attn + 7 mamba mixers; 4 MoE + 4 MLP FFNs; 16 norms."""
+    n_mamba = cfg.hybrid.period - 1
+    n_moe = cfg.hybrid.period // cfg.moe.moe_every
+    n_mlp = cfg.hybrid.period - n_moe
+    return {
+        "attn": attn.attn_param_shapes(cfg),
+        "mamba": jax.tree.map(lambda sh: (n_mamba,) + sh,
+                              ssm_mod.mamba_param_shapes(cfg),
+                              is_leaf=lambda x: isinstance(x, tuple)),
+        "moe": jax.tree.map(lambda sh: (n_moe,) + sh,
+                            moe_mod.moe_param_shapes(cfg),
+                            is_leaf=lambda x: isinstance(x, tuple)),
+        "mlp": jax.tree.map(lambda sh: (n_mlp,) + sh,
+                            mlp_param_shapes(cfg),
+                            is_leaf=lambda x: isinstance(x, tuple)),
+        "ln_mix": {"w": (cfg.hybrid.period, cfg.d_model)},
+        "ln_ffn": {"w": (cfg.hybrid.period, cfg.d_model)},
+    }
+
+
+def xlstm_period_shapes(cfg: ModelConfig) -> dict:
+    n_m = cfg.ssm.slstm_every - 1
+    return {
+        "mlstm": jax.tree.map(lambda sh: (n_m,) + sh,
+                              ssm_mod.mlstm_param_shapes(cfg),
+                              is_leaf=lambda x: isinstance(x, tuple)),
+        "slstm": ssm_mod.slstm_param_shapes(cfg),
+        "ln": {"w": (cfg.ssm.slstm_every, cfg.d_model)},
+    }
+
+
+def encdec_block_shapes(cfg: ModelConfig, cross: bool) -> dict:
+    s = {"ln1": _norm_shapes(cfg), "attn": attn.attn_param_shapes(cfg),
+         "ln2": _norm_shapes(cfg), "mlp": mlp_param_shapes(cfg)}
+    if cross:
+        s["ln_x"] = _norm_shapes(cfg)
+        s["xattn"] = attn.attn_param_shapes(cfg)
+    return s
+
+
+def block_shapes(cfg: ModelConfig) -> dict:
+    if cfg.family == "hybrid":
+        return hybrid_period_shapes(cfg)
+    if cfg.family == "ssm":
+        return xlstm_period_shapes(cfg)
+    return dense_block_shapes(cfg)
+
+
+def n_stacks(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid.period
+    if cfg.family == "ssm":
+        return cfg.n_layers // cfg.ssm.slstm_every
+    return cfg.n_layers
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Full (unsharded) logical shapes for the whole model, as a pytree of
+    tuples. Stacked blocks carry the leading stack dim."""
+    Vp, D = cfg.padded_vocab, cfg.d_model
+    L = n_stacks(cfg)
+    stack = lambda tree: jax.tree.map(lambda sh: (L,) + sh, tree,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+    p = {"embed": (Vp, D), "final_norm": _norm_shapes(cfg),
+         "blocks": stack(block_shapes(cfg))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (D, Vp)
+    if cfg.family == "encdec":
+        Le = cfg.n_enc_layers
+        p["enc_blocks"] = jax.tree.map(
+            lambda sh: (Le,) + sh, encdec_block_shapes(cfg, cross=False),
+            is_leaf=lambda x: isinstance(x, tuple))
+        p["blocks"] = jax.tree.map(
+            lambda sh: (cfg.n_layers,) + sh, encdec_block_shapes(cfg, cross=True),
+            is_leaf=lambda x: isinstance(x, tuple))
+        p["enc_final_norm"] = _norm_shapes(cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Materialize real parameters (reduced/small configs; tests, examples)."""
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    paths = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    ks = jax.random.split(key, len(leaves))
+    out = []
+    for (path, shape), k in zip(paths, ks):
+        name = jax.tree_util.keystr(path)
+        if "norm" in name or "ln" in name or "o_norm" in name:
+            out.append(jnp.ones(shape, dtype) if not name.endswith("['b']")
+                       else jnp.zeros(shape, dtype))
+        elif name.endswith("['b']") or "bias" in name or \
+                name.endswith("['b1']") or name.endswith("['b2']") or \
+                name.endswith("['bq']") or name.endswith("['bk']") or \
+                name.endswith("['bv']") or name.endswith("['conv_b']") or \
+                name.endswith("['dt_bias']"):
+            out.append(jnp.zeros(shape, dtype))
+        elif name.endswith("['A_log']"):
+            N = shape[-1]
+            out.append(jnp.log(jnp.broadcast_to(
+                jnp.arange(1, N + 1, dtype=jnp.float32), shape)).astype(dtype))
+        elif name.endswith("['D_skip']"):
+            out.append(jnp.ones(shape, dtype))
+        elif name.endswith("['embed']"):
+            out.append(embed_init(k, shape, dtype))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            out.append(dense_init(k, shape, in_dim=fan_in, dtype=dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _attn_layer(ctx, cfg, w, x, *, phase, cache=None, length=None, tp=False):
+    if phase in ("train", "prefill"):
+        fn = attn.mla_seqsharded if cfg.attn_type == "mla" else attn.gqa_seqsharded
+        if phase == "prefill":
+            o, new_cache = fn(ctx, w, x, cfg, return_cache=True)
+            return o, new_cache
+        return fn(ctx, w, x, cfg), None
+    fn = attn.mla_decode if cfg.attn_type == "mla" else attn.gqa_decode
+    return fn(ctx, w, x, cache, length, cfg, tp=tp)
+
+
+def _dense_block(ctx, cfg, w, x, *, phase, cache=None, length=None, tp=False):
+    """Returns (x, new_cache, aux)."""
+    h = _apply_norm(w["ln1"], x, cfg)
+    o, new_cache = _attn_layer(ctx, cfg, w["attn"], h, phase=phase,
+                               cache=cache, length=length, tp=tp)
+    x = x + o
+    aux = 0.0
+    h = _apply_norm(w["ln2"], x, cfg)
+    if "moe" in w:
+        mo, maux = moe_mod.moe_ffn(ctx, w["moe"], h, cfg,
+                                   tokens_replicated=(phase == "decode"))
+        aux = maux.load_balance + maux.z_loss
+        if "dense_mlp" in w:
+            hd = _apply_norm(w["ln3"], x, cfg)
+            mo = mo + mlp_forward(ctx, w["dense_mlp"], hd, cfg, tp=tp)
+        x = x + mo
+    else:
+        x = x + mlp_forward(ctx, w["mlp"], h, cfg, tp=tp)
+    return x, new_cache, aux
+
+
+def _take(tree, i):
+    return jax.tree.map(lambda t: t[i], tree)
+
+
+def _hybrid_period(ctx, cfg, w, x, *, phase, caches=None, length=None,
+                   tp=False, mix: AxisCtx = None):
+    """One jamba period (8 sublayers). caches: dict with 'attn' and 'mamba'."""
+    P = cfg.hybrid.period
+    new_caches = {"attn": None, "mamba": []}
+    aux = 0.0
+    mi = 0
+    # sublayer-level remat: the period body is itself rematted by the outer
+    # layer scan; without nested checkpoints its backward would re-save ALL
+    # 7 mamba scans' + 4 MoE rings' residuals at once (hundreds of GiB).
+    ckpt = jax.checkpoint if phase == "train" else (lambda f: f)
+    mix = mix if mix is not None else ctx
+    for i in range(P):
+        h = rms_norm(x, w["ln_mix"]["w"][i], cfg.norm_eps)
+        if i == cfg.hybrid.attn_index:
+            o, nc = _attn_layer(mix, cfg, w["attn"], h, phase=phase,
+                                cache=None if caches is None else caches["attn"],
+                                length=length, tp=tp)
+            new_caches["attn"] = nc
+        else:
+            wm = _take(w["mamba"], mi)
+            st = None if caches is None else caches["mamba"][mi]
+            if phase == "decode":
+                o, st_new = ssm_mod.mamba_decode(wm, h, cfg, st, ctx=ctx, tp=tp)
+            else:
+                o, st_new = ckpt(lambda wm_, h_: ssm_mod.mamba_forward(
+                    wm_, h_, cfg, state=None, ctx=mix))(wm, h)
+            new_caches["mamba"].append(st_new)
+            mi += 1
+        x = x + o
+        h = rms_norm(x, w["ln_ffn"]["w"][i], cfg.norm_eps)
+        if i % cfg.moe.moe_every == cfg.moe.moe_offset:
+            wmoe = _take(w["moe"], i // cfg.moe.moe_every)
+            mo, maux = ckpt(lambda wm_, h_: moe_mod.moe_ffn(
+                ctx, wm_, h_, cfg,
+                tokens_replicated=(phase == "decode")))(wmoe, h)
+            aux = aux + maux.load_balance + maux.z_loss
+            x = x + mo
+        else:
+            wmlp = _take(w["mlp"], i // 2)
+            x = x + mlp_forward(ctx, wmlp, h, cfg, tp=tp)
+    return x, new_caches, aux
+
+
+def _xlstm_period(ctx, cfg, w, x, *, phase, caches=None):
+    """xLSTM period: 3 mLSTM + 1 sLSTM (all residual)."""
+    new_caches = {"mlstm": [], "slstm": None}
+    n_m = cfg.ssm.slstm_every - 1
+    for i in range(n_m):
+        h = rms_norm(x, w["ln"]["w"][i], cfg.norm_eps)
+        st = None if caches is None else caches["mlstm"][i]
+        o, st_new = ssm_mod.mlstm_forward(_take(w["mlstm"], i), h, cfg, state=st)
+        new_caches["mlstm"].append(st_new)
+        x = x + o
+    h = rms_norm(x, w["ln"]["w"][n_m], cfg.norm_eps)
+    st = None if caches is None else caches["slstm"]
+    o, st_new = ssm_mod.slstm_forward(w["slstm"], h, cfg, state=st)
+    new_caches["slstm"] = st_new
+    x = x + o
+    return x, new_caches, 0.0
+
+# ---------------------------------------------------------------------------
+# Layer-stack scanning (ZeRO-3 gather inside the scan body)
+# ---------------------------------------------------------------------------
+
+def seq_sharded_in(cfg: ModelConfig, phase: str) -> bool:
+    """Whether the sequence dim is sharded over `model` in this phase.
+
+    - ssm (xlstm): never — sLSTM/mLSTM recurrences cross shard boundaries.
+    - hybrid (jamba): prefill only. In training the mamba cross-shard state
+      handoff interacts badly with AD ((M,B,d,N) summaries become residuals),
+      so train shards batch over (data x model) with full sequences instead.
+    - all attention-only families: always (SP).
+    """
+    import os
+    if cfg.family == "ssm":
+        return False
+    if cfg.family == "hybrid" and phase == "train":
+        return False
+    if phase == "train" and os.environ.get("REPRO_TRAIN_LAYOUT") == "dp2d":
+        # beyond-paper layout: batch over (data x model), full sequences per
+        # chip — no per-layer K/V all-gather (EXPERIMENTS.md §Perf, yi cell)
+        return False
+    return True
+
+
+def mixer_ctx(ctx: AxisCtx, cfg: ModelConfig, phase: str) -> AxisCtx:
+    """Ctx for token mixers: drops the model axis when sequences are local
+    (keeps vocab sharding and the data/pod axes)."""
+    if seq_sharded_in(cfg, phase):
+        return ctx
+    return dataclasses.replace(ctx, model=None, vocab=ctx.vaxis)
+
+
+def _block_fn(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        return _hybrid_period
+    if cfg.family == "ssm":
+        return _xlstm_period
+    return _dense_block
+
+
+def stack_train(ctx, cfg, blocks_loc, x, gather_fn, *, phase="train",
+                length=None, tp=False):
+    """Forward through the scanned stack. phase='train' keeps only x (+aux);
+    phase='prefill' additionally stacks per-layer caches."""
+    fn = _block_fn(cfg)
+
+    mix = mixer_ctx(ctx, cfg, phase)
+
+    def body(carry, blk_loc):
+        xc, aux = carry
+        blk = gather_fn(blk_loc)
+        if cfg.family == "ssm":
+            xc, caches, a = fn(mix, cfg, blk, xc, phase=phase,
+                               caches=None)
+        elif cfg.family == "hybrid":
+            xc, caches, a = fn(ctx, cfg, blk, xc, phase=phase, length=length,
+                               tp=tp, mix=mix)
+        else:
+            xc, caches, a = fn(ctx, cfg, blk, xc, phase=phase, length=length,
+                               tp=tp)
+        ys = caches if phase == "prefill" else 0
+        return (xc, aux + a), ys
+
+    wrapped = jax.checkpoint(body) if phase == "train" else body
+    (x, aux), caches = jax.lax.scan(wrapped, (x, 0.0), blocks_loc)
+    return x, aux, caches
+
+
+def stack_decode(ctx, cfg, blocks_loc, x, caches, length, gather_fn, *,
+                 tp=True):
+    fn = _block_fn(cfg)
+
+    def body(xc, xs):
+        blk_loc, cache = xs
+        blk = gather_fn(blk_loc)
+        if cfg.family == "ssm":
+            xc, new_cache, _ = fn(ctx, cfg, blk, xc, phase="decode",
+                                  caches=cache)
+        elif cfg.family == "hybrid":
+            xc, new_cache, _ = fn(ctx, cfg, blk, xc, phase="decode",
+                                  caches=cache, length=length, tp=tp)
+        else:
+            xc, new_cache, _ = fn(ctx, cfg, blk, xc, phase="decode",
+                                  cache=cache, length=length, tp=tp)
+        return xc, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (blocks_loc, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper) specifics
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions, D):
+    half = D // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def _cross_attn(ctx, cfg, w, x_dec, enc_k, enc_v, *, tp=False):
+    """Cross-attention: q from decoder rows, K/V precomputed from encoder
+    output (already gathered/global). Non-causal."""
+    B, S_loc = x_dec.shape[0], x_dec.shape[1]
+    H, HD = cfg.n_heads, cfg.resolved_head_dim
+    q = attn.col_matmul(ctx, x_dec, w["wq"], w.get("bq"), tp)
+    q = q.reshape(B, S_loc, H, HD)
+    o = ops.flash_attention(q, enc_k, enc_v, 0, False)
+    return attn.row_matmul(ctx, o.reshape(B, S_loc, H * HD), w["wo"], tp)
+
+
+def _enc_kv(ctx, cfg, w, enc_out, *, gathered=True):
+    """K/V of encoder output for cross-attention (global sequence)."""
+    B = enc_out.shape[0]
+    KV, HD = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = (enc_out @ w["wk"] + w.get("bk", 0)).reshape(B, -1, KV, HD)
+    v = (enc_out @ w["wv"] + w.get("bv", 0)).reshape(B, -1, KV, HD)
+    return k, v
+
+
+def encoder_forward(ctx, cfg, enc_blocks_loc, frames, gather_fn):
+    """frames: (B, S_loc, D) stub embeddings, sequence-sharded."""
+    S_loc = frames.shape[1]
+    pos = ctx.index(ctx.model) * S_loc + jnp.arange(S_loc)
+    x = frames + _sinusoid(pos, cfg.d_model)[None].astype(frames.dtype)
+
+    def body(xc, blk_loc):
+        blk = gather_fn(blk_loc)
+        h = _apply_norm(blk["ln1"], xc, cfg)
+        o = attn.gqa_seqsharded(ctx, blk["attn"], h, cfg, causal=False)
+        xc = xc + o
+        h = _apply_norm(blk["ln2"], xc, cfg)
+        xc = xc + mlp_forward(ctx, blk["mlp"], h, cfg)
+        return xc, 0
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, enc_blocks_loc)
+    return x
+
+
+def encdec_train(ctx, cfg, params, batch, gather_fn):
+    enc_out = encoder_forward(ctx, cfg, params["enc_blocks"], batch["frames"],
+                              gather_fn)
+    enc_out = _apply_norm(params["enc_final_norm"], enc_out, cfg)
+    enc_full = ctx.all_gather(enc_out, ctx.model, axis=1)    # (B, S_enc, D)
+    x = embed_lookup(ctx, params["embed"], batch["tokens"],
+                     out_dtype=enc_out.dtype)
+
+    def body(carry, blk_loc):
+        xc, _ = carry
+        blk = gather_fn(blk_loc)
+        h = _apply_norm(blk["ln1"], xc, cfg)
+        xc = xc + attn.gqa_seqsharded(ctx, blk["attn"], h, cfg)
+        h = _apply_norm(blk["ln_x"], xc, cfg)
+        ek, ev = _enc_kv(ctx, cfg, blk["xattn"], enc_full)
+        xc = xc + _cross_attn(ctx, cfg, blk["xattn"], h, ek, ev)
+        h = _apply_norm(blk["ln2"], xc, cfg)
+        xc = xc + mlp_forward(ctx, blk["mlp"], h, cfg)
+        return (xc, 0.0), 0
+
+    (x, _), _ = jax.lax.scan(jax.checkpoint(body), (x, 0.0), params["blocks"])
+    return x, enc_full
+
+
+# ---------------------------------------------------------------------------
+# Public Model API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- construction -------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        return init_params(key, self.cfg, dtype)
+
+    def shapes(self):
+        return param_shapes(self.cfg)
+
+    # -- training ------------------------------------------------------
+    def loss(self, ctx: AxisCtx, params, batch, gather_fn=lambda b: b):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            x, _ = encdec_train(ctx, cfg, params, batch, gather_fn)
+            aux = 0.0
+        else:
+            emb = params["embed"]
+            if cfg.tie_embeddings:
+                emb_full = ctx.all_gather(emb, ctx.vaxis, axis=0)
+                x = embed_lookup(ctx, emb_full, batch["tokens"], tied=True)
+            else:
+                x = embed_lookup(ctx, emb, batch["tokens"])
+            x, aux, _ = stack_train(ctx, cfg, params["blocks"], x, gather_fn)
+        x = _apply_norm(params["final_norm"], x, cfg)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        loss = softmax_xent_vshard(ctx, logits, batch["labels"])
+        aux = ctx.pmean(aux, tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a))
+        return loss + aux, {"loss": loss, "aux": aux}
+
+    # -- serving -------------------------------------------------------
+    def prefill(self, ctx: AxisCtx, params, batch, gather_fn=lambda b: b):
+        """Returns (caches, last_logits, length)."""
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            emb_full = ctx.all_gather(params["embed"], ctx.vaxis, axis=0)
+            x = embed_lookup(ctx, emb_full, batch["tokens"], tied=True)
+        else:
+            x = embed_lookup(ctx, params["embed"], batch["tokens"])
+        x, _, caches = stack_train(ctx, cfg, params["blocks"], x, gather_fn,
+                                   phase="prefill")
+        x = _apply_norm(params["final_norm"], x, cfg)
+        last = x[:, -1:]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (last @ head.astype(last.dtype)).astype(jnp.float32)
+        if ctx.model is not None:
+            M = ctx.size(ctx.model)
+            is_last = (ctx.index(ctx.model) == M - 1).astype(jnp.float32)
+            logits = ctx.psum(logits * is_last, ctx.model)
+        return caches, logits[:, 0], None
+
+    def decode_step(self, ctx: AxisCtx, params, tokens, caches, length,
+                    gather_fn=lambda b: b, *, tp=True):
+        """tokens: (B,) previous token ids; length: (B,) context length.
+        Returns (logits_loc (B, V_loc), new_caches)."""
+        cfg = self.cfg
+        x = embed_lookup(ctx, params["embed"], tokens[:, None],
+                         tied=cfg.tie_embeddings, tokens_replicated=True)
+        x, new_caches = stack_decode(ctx, cfg, params["blocks"], x, caches,
+                                     length, gather_fn, tp=tp)
+        x = _apply_norm(params["final_norm"], x, cfg)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        return logits[:, 0], new_caches
+
+    def greedy_token(self, ctx: AxisCtx, logits_loc):
+        """Global argmax over the vocab-sharded logits. (B, V_loc) -> (B,)."""
+        V_loc = logits_loc.shape[-1]
+        off = ctx.index(ctx.vaxis) * V_loc
+        idx = jnp.argmax(logits_loc, -1)
+        val = jnp.take_along_axis(logits_loc, idx[:, None], 1)[:, 0]
+        if ctx.vaxis is None:
+            return idx
+        both = jnp.stack([val, (idx + off).astype(val.dtype)], -1)  # (B, 2)
+        allv = ctx.all_gather(both[None], ctx.vaxis, axis=0)        # (M, B, 2)
+        best = jnp.argmax(allv[..., 0], axis=0)                     # (B,)
+        return jnp.take_along_axis(
+            allv[..., 1], best[None], 0)[0].astype(jnp.int32)
+
+
+def pad_caches(caches, extra: int):
+    """Grow attention caches by ``extra`` sequence slots (recurrent SSM states
+    are position-free and pass through untouched).
+
+    Note: valid for unsharded or data-only-sharded caches. A sequence-sharded
+    cache (model axis) has a fixed per-shard block layout — size the capacity
+    at prefill time instead (see launch/serve.py).
+    """
+    kinds = (attn.KVCache, attn.LatentCache)
+
+    def fix(leaf):
+        if isinstance(leaf, attn.KVCache) or isinstance(leaf, attn.LatentCache):
+            return type(leaf)(*[
+                jnp.pad(t, [(0, 0)] * 2 + [(0, extra)] + [(0, 0)] * (t.ndim - 3))
+                for t in leaf])
+        return leaf
+
+    return jax.tree.map(fix, caches, is_leaf=lambda x: isinstance(x, kinds))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return Model(cfg)
+
+
+class EncDecCaches(NamedTuple):
+    self_caches: Any          # stacked KVCache over decoder layers
+    cross_k: Any              # (L, B, S_loc, KV, HD) sequence-sharded
+    cross_v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecModel(Model):
+    def loss(self, ctx, params, batch, gather_fn=lambda b: b):
+        cfg = self.cfg
+        x, _ = encdec_train(ctx, cfg, params, batch, gather_fn)
+        x = _apply_norm(params["final_norm"], x, cfg)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        loss = softmax_xent_vshard(ctx, logits, batch["labels"])
+        return loss, {"loss": loss, "aux": 0.0}
+
+    def prefill(self, ctx, params, batch, gather_fn=lambda b: b):
+        """Encoder forward + decoder prefill over the prompt tokens."""
+        cfg = self.cfg
+        enc_out = encoder_forward(ctx, cfg, params["enc_blocks"],
+                                  batch["frames"], gather_fn)
+        enc_out = _apply_norm(params["enc_final_norm"], enc_out, cfg)
+        enc_full = ctx.all_gather(enc_out, ctx.model, axis=1)
+        x = embed_lookup(ctx, params["embed"], batch["tokens"],
+                         out_dtype=enc_out.dtype)
+
+        def body(xc, blk_loc):
+            blk = gather_fn(blk_loc)
+            h = _apply_norm(blk["ln1"], xc, cfg)
+            o, cache = attn.gqa_seqsharded(ctx, blk["attn"], h, cfg,
+                                           return_cache=True)
+            xc = xc + o
+            h = _apply_norm(blk["ln_x"], xc, cfg)
+            ek, ev = _enc_kv(ctx, cfg, blk["xattn"], enc_full)
+            xc = xc + _cross_attn(ctx, cfg, blk["xattn"], h, ek, ev)
+            h = _apply_norm(blk["ln2"], xc, cfg)
+            xc = xc + mlp_forward(ctx, blk["mlp"], h, cfg)
+            # store the *local* slice of cross K/V (seq-sharded cache)
+            ck, cv = _enc_kv(ctx, cfg, blk["xattn"], enc_out)
+            return xc, (cache, ck, cv)
+
+        x, (self_caches, cross_k, cross_v) = jax.lax.scan(
+            body, x, params["blocks"])
+        x = _apply_norm(params["final_norm"], x, cfg)
+        last = x[:, -1:]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (last @ head.astype(last.dtype)).astype(jnp.float32)
+        if ctx.model is not None:
+            M = ctx.size(ctx.model)
+            is_last = (ctx.index(ctx.model) == M - 1).astype(jnp.float32)
+            logits = ctx.psum(logits * is_last, ctx.model)
+        return EncDecCaches(self_caches, cross_k, cross_v), logits[:, 0], None
+
+    def decode_step(self, ctx, params, tokens, caches, length,
+                    gather_fn=lambda b: b, *, tp=True):
+        cfg = self.cfg
+        x = embed_lookup(ctx, params["embed"], tokens[:, None])
+        S_enc_loc = caches.cross_k.shape[2]
+        enc_len = jnp.full((x.shape[0],),
+                           S_enc_loc * max(ctx.size(ctx.model), 1), jnp.int32)
+
+        def body(xc, xs):
+            blk_loc, cache, ck, cv = xs
+            blk = gather_fn(blk_loc)
+            h = _apply_norm(blk["ln1"], xc, cfg)
+            o, new_cache = attn.gqa_decode(ctx, blk["attn"], h, cache, length,
+                                           cfg, tp=tp)
+            xc = xc + o
+            # cross-attention over the sequence-sharded encoder cache
+            h = _apply_norm(blk["ln_x"], xc, cfg)
+            H, HD = cfg.n_heads, cfg.resolved_head_dim
+            q = attn.col_matmul(ctx, h, blk["xattn"]["wq"],
+                                blk["xattn"].get("bq"), tp)
+            q = q.reshape(xc.shape[0], H, HD)
+            loc_len = jnp.full_like(length, S_enc_loc)
+            o2, m2, l2 = ops.decode_attention(q, ck, cv, loc_len, combine=False)
+            if ctx.model is not None:
+                B = xc.shape[0]
+                stats = jnp.concatenate([o2.reshape(B, -1), m2, l2], -1)
+                g = ctx.all_gather(stats[None], ctx.model, axis=0)
+                o_all = g[..., :H * HD].reshape(-1, B, H, HD)
+                m_all = g[..., H * HD:H * HD + H].reshape(-1, B, H)
+                l_all = g[..., H * HD + H:].reshape(-1, B, H)
+                mg = m_all.max(0)
+                wgt = jnp.exp(m_all - mg[None])
+                lg = (l_all * wgt).sum(0)
+                o2 = (o_all * wgt[..., None]).sum(0) / jnp.maximum(
+                    lg, 1e-30)[..., None]
+            else:
+                o2 = o2 / jnp.maximum(l2, 1e-30)[..., None]
+            o2 = attn.row_matmul(ctx, o2.astype(xc.dtype).reshape(
+                xc.shape[0], 1, H * HD), blk["xattn"]["wo"], tp)
+            xc = xc + o2
+            h = _apply_norm(blk["ln2"], xc, cfg)
+            xc = xc + mlp_forward(ctx, blk["mlp"], h, cfg, tp=tp)
+            return xc, new_cache
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["blocks"], caches.self_caches,
+                      caches.cross_k, caches.cross_v))
+        x = _apply_norm(params["final_norm"], x, cfg)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        return logits[:, 0], EncDecCaches(new_self, caches.cross_k,
+                                          caches.cross_v)

@@ -1,0 +1,128 @@
+"""Host-level FL executor — the faithful rendering of paper Algorithm 1.
+
+The Logic Controller's ProcessPhase x NodeStage machine survives here as the
+*host* round loop: everything that is genuinely I/O (data staging, straggler
+deadlines, checkpoint/restart, ledger records, dashboards). The compiled
+round program (core/rounds.py) is the part that was polling/signalling in
+the paper and is now a single XLA program.
+
+ProcessPhase: 0=init 1=local-learning 2=aggregation (paper §2.3).
+NodeStage:    0=not-ready 1=ready-for-job 2=ready-with-dataset
+              3=busy 4=waiting/complete.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.core import determinism
+from repro.core.blockchain import param_digest
+from repro.core.kvstore import KVStore
+from repro.core.rounds import build_spatial_round, init_state
+from repro.metrics.logger import PerformanceLogger
+from repro.runtime.faults import select_cohort
+from repro.sharding.axes import AxisCtx
+
+
+@dataclasses.dataclass
+class Executor:
+    job: Any                              # core.jobs.Job
+    ctx: AxisCtx = AxisCtx()
+    ckpt_dir: Optional[str] = None
+    logger: Optional[PerformanceLogger] = None
+    eval_fn: Optional[Callable] = None    # (params) -> dict of metrics
+
+    def __post_init__(self):
+        self.kv = KVStore()
+        self.logger = self.logger or PerformanceLogger(run_name=self.job.name)
+        self.round_fn = jax.jit(
+            lambda s, b, w, r: build_spatial_round(
+                self.job.model, self.job.strategy, self.job.fl)(
+                self.ctx, s, b, w, r))
+
+    # -- Alg. 1 lines 1-15: scaffold ------------------------------------
+    def scaffold(self):
+        fl = self.job.fl
+        self.kv.set_process_phase(0)
+        nodes = [f"client_{i}" for i in range(fl.n_clients)]
+        for n in nodes:                      # "DownloadJobConfig <- True"
+            self.kv.set_node_stage(n, 1)
+        x, y, parts = self.job.dataset.distribute_into_chunks(
+            fl.partition, fl.n_clients, fl.dirichlet_alpha)
+        self.data = (x, y, parts)
+        for n in nodes:                      # "DownloadDataset"
+            self.kv.set_node_stage(n, 2)
+        self.nodes = nodes
+        key = determinism.root_key(fl.seed)
+        self.state = init_state(self.job.model, self.job.strategy, fl, key,
+                                n_clients_local=fl.n_clients)
+        self.round_idx = 0
+        # restart path (fault tolerance): resume from the newest manifest
+        if self.ckpt_dir:
+            last = ckpt_mod.latest_round(self.ckpt_dir)
+            if last is not None:
+                self.state, extra = ckpt_mod.restore(
+                    self.ckpt_dir, last, self.state)
+                self.round_idx = extra["next_round"]
+        return self
+
+    # -- Alg. 1 lines 16-57: round loop ----------------------------------
+    def run(self, rounds: Optional[int] = None):
+        fl = self.job.fl
+        rounds = rounds or fl.rounds
+        x, y, parts = self.data
+        root = determinism.root_key(fl.seed)
+        while self.round_idx < rounds:
+            r = self.round_idx
+            rkey = determinism.round_key(root, r)
+            # phase 1: cohort selection with straggler mitigation
+            self.kv.set_process_phase(1)
+            target = fl.cohort or fl.n_clients
+            cohort = select_cohort(self.job.fault, r,
+                                   np.arange(fl.n_clients), target,
+                                   fl.straggler_overprovision)
+            batches, weights = [], []
+            for c in range(fl.n_clients):
+                steps = max(fl.local_steps, 1)
+                b, _ = type(self.job.dataset).client_batches(
+                    x, y, parts[c], batch_size=min(32, len(parts[c])),
+                    n_steps=steps, seed=fl.seed * 7919 + c + r * 104729)
+                batches.append(b)
+                # dropped/straggler clients get zero weight (unbiased drop)
+                weights.append(float(len(parts[c])) if c in cohort else 0.0)
+            batch = jax.tree.map(lambda *t: np.stack(t), *batches)
+            weights = jnp.asarray(weights, jnp.float32)
+            for n in self.nodes:
+                self.kv.set_node_stage(n, 3)
+            # phases 1->2 happen inside the compiled round
+            self.kv.set_process_phase(2)
+            t0 = time.time()
+            self.state, metrics = self.round_fn(self.state, batch, weights,
+                                                rkey)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            for n in self.nodes:
+                self.kv.set_node_stage(n, 4)
+            # ledger: provenance of the chosen global model
+            if self.job.ledger is not None:
+                dig = param_digest(self.state["params"])
+                self.job.ledger.record_global(r, self.state["params"])
+                self.kv.publish(f"global_digest/{r}", dig)
+            row = dict(metrics, round_s=dt)
+            if self.eval_fn is not None:
+                row.update({k: float(v) for k, v in
+                            self.eval_fn(self.state["params"]).items()})
+            self.logger.log_round(r, **row)
+            self.round_idx += 1
+            if self.ckpt_dir and fl.checkpoint_every and \
+                    self.round_idx % fl.checkpoint_every == 0:
+                ckpt_mod.save(self.ckpt_dir, self.round_idx, self.state,
+                              extra={"next_round": self.round_idx},
+                              async_write=False)
+        return self.state, self.logger

@@ -1,0 +1,50 @@
+"""Fault injection + straggler simulation (paper Alg. 1 timeout() semantics,
+scaled to 1000+-node thinking).
+
+The host executor asks this module, per round, which cohort members respond
+in time. Deterministic given the seed — so fault-tolerance tests can assert
+bitwise-reproducible recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    drop_prob: float = 0.0        # client fails mid-round
+    straggler_prob: float = 0.0   # client exceeds the deadline
+    straggler_slowdown: float = 4.0
+    worker_fail_prob: float = 0.0
+    seed: int = 0
+
+    def round_outcome(self, round_idx: int, client_ids):
+        """Returns (alive_mask, sim_durations). Durations ~ lognormal with
+        stragglers inflated; the executor keeps the first-K by duration."""
+        rng = np.random.RandomState(self.seed * 1_000_003 + round_idx)
+        n = len(client_ids)
+        alive = rng.rand(n) >= self.drop_prob
+        dur = rng.lognormal(mean=0.0, sigma=0.25, size=n)
+        stragglers = rng.rand(n) < self.straggler_prob
+        dur = np.where(stragglers, dur * self.straggler_slowdown, dur)
+        return alive, dur
+
+
+def select_cohort(fault: FaultModel, round_idx: int, client_ids,
+                  target: int, overprovision: float = 1.0):
+    """Over-provisioned cohort with deadline-drop (straggler mitigation):
+    sample ceil(target*overprovision) clients, keep the ``target`` fastest
+    alive ones; if fewer than target survive, keep the survivors and
+    re-normalize weights (unbiased under random failures)."""
+    want = int(np.ceil(target * overprovision))
+    rng = np.random.RandomState(0xC0047 + round_idx)
+    pool = rng.choice(client_ids, size=min(want, len(client_ids)),
+                      replace=False)
+    alive, dur = fault.round_outcome(round_idx, pool)
+    surv = pool[alive]
+    dur = dur[alive]
+    order = np.argsort(dur)
+    kept = surv[order[:target]]
+    return np.sort(kept)

@@ -1,0 +1,297 @@
+"""PartitionSpec rule tables for every (architecture x phase).
+
+Phases:
+- ``fsdp``    (train / prefill): every block tensor ZeRO-3-sharded over
+  ``model`` on one divisible dim and all-gathered per layer inside the layer
+  scan. MoE expert tensors are EP-resident (never gathered): see moe.py.
+- ``tp``      (decode): column/row tensor-parallel resident weights; tensors
+  whose parallel dim does not divide the mesh (MLA attention, xLSTM) are
+  replicated — they are small by construction.
+- ``spatial`` (small archs): everything replicated; the flattened
+  (data x model) grid is the FL client grid.
+
+Rules are keyed by parameter leaf name; the table is validated by
+tests/test_sharding_specs.py (every spec dim must divide the mesh axis).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+# Archs small enough for spatial (per-chip replica) placement.
+SPATIAL_ARCHS = ("whisper-base", "xlstm-125m", "flsim-cnn", "flsim-mlp",
+                 "flsim-logreg")
+
+
+def placement_for(cfg: ModelConfig) -> str:
+    name = cfg.name.removesuffix("-reduced")
+    return "spatial" if name in SPATIAL_ARCHS else "temporal"
+
+
+# ---------------------------------------------------------------------------
+# Rule tables: name -> dim sharded over `model` (per-layer shapes, no stack
+# dim). None = replicated.
+# ---------------------------------------------------------------------------
+
+_FSDP_DIM = {
+    # attention (GQA)
+    "wq": 1, "wk": 1, "wv": 1, "wo": 0, "bq": 0, "bk": 0, "bv": 0,
+    "q_norm": 0, "k_norm": 0,
+    # MLA
+    "wdq": 1, "wuq": 1, "wdkv": 1, "kv_norm": 0, "wukv": 1,
+    # MLP (w1/w3/w2 shared with experts-free path)
+    "w1": 1, "w3": 1, "w2": 0, "b1": 0, "b2": 0,
+    # norms
+    "w": 0, "b": 0,
+    # moe (router gathered; experts resident -> handled separately)
+    "router": 1,
+    # mamba
+    "in_proj_x": 1, "in_proj_z": 1, "conv_w": 1, "conv_b": 0,
+    "x_proj": 1, "dt_proj": 1, "dt_bias": 0, "A_log": 0, "D_skip": 0,
+    "out_proj": 0,
+    # xlstm
+    "up_proj": 1, "wif": 0, "o_norm": 0, "down_proj": 0,
+    "wx": 1, "rh": 1, "ff1": 1, "ff2": 0,
+}
+
+_TP_DIM = {
+    # attention: column for qkv (flattened head dim divides), row for wo
+    "wq": 1, "wk": 1, "wv": 1, "wo": 0, "bq": 0, "bk": 0, "bv": 0,
+    "q_norm": None, "k_norm": None,
+    # MLA decode: replicated (absorbed einsums are not head-shardable)
+    "wdq": None, "wuq": None, "wdkv": None, "kv_norm": None, "wukv": None,
+    # MLP
+    "w1": 1, "w3": 1, "w2": 0, "b1": 0, "b2": None,
+    "w": None, "b": None,
+    "router": None,
+    # mamba decode: channels (d_inner) sharded
+    "in_proj_x": 1, "in_proj_z": 1, "conv_w": 1, "conv_b": 0,
+    "x_proj": 0, "dt_proj": 1, "dt_bias": 0, "A_log": 0, "D_skip": 0,
+    "out_proj": 0,
+    # xlstm decode: replicated (tiny)
+    "up_proj": None, "wif": None, "o_norm": None, "down_proj": None,
+    "wx": None, "rh": None, "ff1": None, "ff2": None,
+}
+
+# MLA attention weights replicate in tp mode; wo for MLA too.
+_TP_MLA_OVERRIDE = {"wo": None, "wq": None, "wk": None, "wv": None}
+
+
+def _moe_expert_spec(cfg: ModelConfig, nstack: int) -> dict:
+    """Expert tensors (stack, E, D, F)/(stack, E, F, D): EP-resident."""
+    if cfg.moe.ep_mode == "model":
+        w1 = P(*((None,) * nstack), "model", None, None)
+        w2 = P(*((None,) * nstack), "model", None, None)
+    elif cfg.moe.ep_mode == "subgrid":
+        # packed (E*f_sub, D, F/f_sub) over the flattened grid
+        w1 = P(*((None,) * nstack), ("data", "model"), None, None)
+        w2 = w1
+    else:  # grid: E over data, F over model
+        w1 = P(*((None,) * nstack), "data", None, "model")
+        w2 = P(*((None,) * nstack), "data", "model", None)
+    return {"w1": w1, "w3": w1, "w2": w2}
+
+
+def param_specs(cfg: ModelConfig, phase: str) -> dict:
+    """PartitionSpec tree matching transformer.param_shapes(cfg) exactly."""
+    shapes = transformer.param_shapes(cfg)
+    if phase == "spatial":
+        return jax.tree.map(lambda sh: P(), shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    table = dict(_TP_DIM if phase == "tp" else _FSDP_DIM)
+    if phase == "tp" and cfg.attn_type == "mla":
+        table.update(_TP_MLA_OVERRIDE)
+
+    def assign(path, shape):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1]
+        top = keys[0]
+        # input embedding: D-sharded (local lookup + tiny feature gather);
+        # tied embeddings stay vocab-sharded (shared with the head).
+        if name == "embed":
+            if cfg.tie_embeddings:
+                return P("model", None)
+            return P(None, "model")
+        if name == "lm_head":
+            return P(None, "model")
+        if top in ("final_norm", "enc_final_norm"):
+            return P(None)
+        nstack = len(shape) - _base_ndim(cfg, keys)
+        # MoE experts: EP-resident
+        if "moe" in keys and name in ("w1", "w3", "w2"):
+            return _moe_expert_spec(cfg, nstack)[name]
+        dim = table.get(name, 0 if len(shape) == 1 else None)
+        if dim is None:
+            return P(*([None] * len(shape)))
+        dim += nstack
+        if shape[dim] % 16 != 0:
+            # fall back to replication if the mesh cannot divide this dim
+            return P(*([None] * len(shape)))
+        spec = [None] * len(shape)
+        spec[dim] = "model"
+        return P(*spec)
+
+    flat = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    leaves = [assign(path, sh) for path, sh in flat[0]]
+    return jax.tree.unflatten(flat[1], leaves)
+
+
+def _base_ndim(cfg: ModelConfig, keys) -> int:
+    """ndim of the per-layer tensor (no stack dims) for this leaf."""
+    name = keys[-1]
+    base = {
+        "wq": 2, "wk": 2, "wv": 2, "wo": 2, "bq": 1, "bk": 1, "bv": 1,
+        "q_norm": 1, "k_norm": 1, "wdq": 2, "wuq": 2, "wdkv": 2,
+        "kv_norm": 1, "wukv": 2, "w1": 2, "w3": 2, "w2": 2, "b1": 1, "b2": 1,
+        "w": 1, "b": 1, "router": 2, "in_proj_x": 2, "in_proj_z": 2,
+        "conv_w": 2, "conv_b": 1, "x_proj": 2, "dt_proj": 2, "dt_bias": 1,
+        "A_log": 2, "D_skip": 1, "out_proj": 2, "up_proj": 2, "wif": 2,
+        "o_norm": 1, "down_proj": 2, "wx": 2, "rh": 2, "ff1": 2, "ff2": 2,
+        "embed": 2, "lm_head": 2,
+    }[name]
+    if "moe" in keys and name in ("w1", "w3", "w2"):
+        base = 3  # (E, D, F)
+    return base
+
+
+def gather_dim_table(cfg: ModelConfig) -> dict:
+    """(parent, name) -> per-scan-body gather dim over ``model``, or None.
+
+    The layer scan consumes exactly ONE leading stack dim, so the gather dim
+    is the storage-spec 'model' position minus one — correct for nested
+    stacks too (jamba period tensors keep their inner (7,)/(4,) dims inside
+    the scan body). None = never gathered (EP experts, vocab shards,
+    replicated leaves)."""
+    specs = param_specs(cfg, "fsdp")
+    shapes = transformer.param_shapes(cfg)
+    table: dict = {}
+
+    def visit(path, spec):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1]
+        parent = keys[-2] if len(keys) >= 2 else ""
+        top = keys[0]
+        if top in ("embed", "lm_head", "final_norm", "enc_final_norm"):
+            return
+        if "moe" in keys and name in ("w1", "w3", "w2"):
+            table[(parent, name)] = None
+            return
+        dim = None
+        for i, entry in enumerate(spec):
+            if entry == "model" or (isinstance(entry, tuple)
+                                    and "model" in entry):
+                dim = i - 1
+                break
+        prev = table.get((parent, name), "missing")
+        assert prev in ("missing", dim), \
+            f"gather-dim conflict for {(parent, name)}: {prev} vs {dim}"
+        table[(parent, name)] = dim
+
+    flat_sh = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_sp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, _), sp in zip(flat_sh[0], flat_sp):
+        visit(path, sp)
+    return table
+
+
+def make_gather_fn(cfg: ModelConfig, ctx):
+    """Closure for the per-layer ZeRO-3 all-gather used by the layer scans.
+    Works on any block subtree (decoder, encoder, hybrid period).
+
+    REPRO_QUANT_GATHER=1 (beyond-paper, EXPERIMENTS.md §Perf): big weight
+    shards are symmetric-int8 block-quantized before the gather and
+    dequantized after — the paper's communication-efficient-FL idea applied
+    to the intra-model ZeRO-3 collectives. Halves AG bytes vs bf16
+    (W8A16-style compute; the fp master copy is untouched)."""
+    import os
+    if ctx.model is None or placement_for(cfg) == "spatial":
+        return lambda blk: blk
+    table = gather_dim_table(cfg)
+    quant = os.environ.get("REPRO_QUANT_GATHER") == "1"
+
+    def ag(t, d):
+        import jax.numpy as jnp
+        if quant and t.size >= 1 << 16 and t.dtype == jnp.bfloat16:
+            amax = jnp.max(jnp.abs(t.astype(jnp.float32)),
+                           axis=d, keepdims=True)
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale),
+                         -127, 127).astype(jnp.int8)
+            qg = jax.lax.all_gather(q, ctx.model, axis=d, tiled=True)
+            sg = jax.lax.all_gather(scale, ctx.model, axis=d, tiled=True)
+            # dequant: shard j of the tiled gather uses scale slice j
+            M = sg.shape[d]
+            loc = qg.shape[d] // M
+            qm = jnp.moveaxis(qg, d, -1)
+            sm = jnp.moveaxis(sg, d, -1)
+            out = (qm.reshape(qm.shape[:-1] + (M, loc)).astype(jnp.float32)
+                   * sm[..., None]).reshape(qm.shape)
+            return jnp.moveaxis(out, -1, d).astype(t.dtype)
+        return jax.lax.all_gather(t, ctx.model, axis=d, tiled=True)
+
+    def gather(blk_loc):
+        def f(path, t):
+            keys = [k.key for k in path if hasattr(k, "key")]
+            name = keys[-1]
+            parent = keys[-2] if len(keys) >= 2 else ""
+            d = table.get((parent, name))
+            if d is None:
+                return t
+            return ag(t, d)
+        return jax.tree_util.tree_map_with_path(f, blk_loc)
+
+    return gather
+
+
+def make_grad_sync(cfg: ModelConfig, ctx):
+    """Spec-aware gradient sync for the temporal round: pmean over the batch
+    axes (pod, data) for every leaf NOT sharded over them (grid-EP expert
+    grads are data-local by construction — their tokens arrived via a2a)."""
+    specs = param_specs(cfg, "fsdp")
+
+    def sync(grads):
+        def f(g, sp):
+            axes = []
+            for a in (ctx.pod, ctx.data):
+                if a is None:
+                    continue
+                in_spec = any(
+                    a in (e if isinstance(e, tuple) else (e,))
+                    for e in sp if e is not None)
+                if not in_spec:
+                    axes.append(a)
+            return jax.lax.pmean(g, tuple(axes)) if axes else g
+
+        return jax.tree.map(f, grads, specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return sync
+
+
+def batch_specs(cfg: ModelConfig, shape_kind: str, global_batch: int,
+                mesh_axes) -> P:
+    """Sharding of the leading batch dim for a given phase/mesh.
+
+    Batch goes over (pod, data) when divisible; decode long-context (B=1)
+    replicates. Spatial archs shard the client grid over (data, model)."""
+    axes = []
+    n = 1
+    sizes = dict(mesh_axes)
+    if placement_for(cfg) == "spatial" and shape_kind == "train":
+        want = ["data", "model"]
+    elif shape_kind in ("train", "prefill"):
+        want = ["pod", "data"]
+    else:  # decode
+        want = ["pod", "data"]
+    for a in want:
+        if a in sizes and global_batch % (n * sizes[a]) == 0:
+            axes.append(a)
+            n *= sizes[a]
+    return P(tuple(axes) if axes else None)

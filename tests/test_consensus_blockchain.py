@@ -1,0 +1,95 @@
+"""Multi-worker consensus (paper RQ3) + hash-chain ledger (RQ4) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blockchain import HashChainLedger, get_ledger, param_digest
+from repro.core.consensus import (MultiWorkerAggregator, digest,
+                                  majority_digest, median_select, poison,
+                                  trimmed_mean)
+
+
+def agg_delta(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (128,)), "b": jnp.ones((4,))}
+
+
+@pytest.mark.parametrize("n_workers,n_byz,nullified", [
+    (1, 1, False),   # 1M-0H: single malicious worker poisons the model
+    (2, 1, False),   # 1M-1H: tie — consensus cannot decide reliably
+    (3, 1, True),    # 1M-2H: honest majority nullifies
+    (4, 1, True),    # 1M-3H
+])
+def test_majority_nullifies_minority_poisoners(n_workers, n_byz, nullified):
+    """Paper Fig. 10 semantics: > 50% honest workers nullify poisoning."""
+    d = agg_delta()
+    mw = MultiWorkerAggregator(n_workers, n_byz, "majority_digest")
+    out = mw.run(d, jax.random.PRNGKey(1))
+    same = np.allclose(np.asarray(out["w"]), np.asarray(d["w"]), atol=1e-5)
+    if nullified:
+        assert same, "honest majority should have selected the clean model"
+    elif n_workers == 1:
+        assert not same, "a single malicious worker must poison the result"
+
+
+def test_median_robust_to_minority():
+    d = agg_delta()
+    stacked = jax.tree.map(
+        lambda t: jnp.stack([t, t, t + 100.0]), d)   # 1 of 3 poisoned
+    out = median_select(stacked, {})
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(d["w"]),
+                               atol=1e-5)
+
+
+def test_trimmed_mean_drops_outliers():
+    d = agg_delta()
+    stacked = jax.tree.map(
+        lambda t: jnp.stack([t - 1000.0, t, t, t + 1000.0]), d)
+    out = trimmed_mean(stacked, {"trim": 1})
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(d["w"]),
+                               atol=1e-4)
+
+
+def test_digest_deterministic_and_sensitive():
+    d = agg_delta()
+    assert np.allclose(np.asarray(digest(d)), np.asarray(digest(d)))
+    d2 = poison(d, scale=0.1)
+    assert not np.allclose(np.asarray(digest(d)), np.asarray(digest(d2)),
+                           atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ledger
+# ---------------------------------------------------------------------------
+
+def test_chain_verifies_and_detects_tampering():
+    led = HashChainLedger()
+    p = agg_delta()
+    led.record_aggregate(0, "worker_0", p)
+    led.record_consensus(0, "majority_digest", param_digest(p),
+                         {"worker_0": param_digest(p)})
+    led.record_global(0, p)
+    assert led.verify()
+    led._chain[2].payload["chosen"] = "deadbeef"
+    assert not led.verify()
+
+
+def test_provenance_and_reputation():
+    led = HashChainLedger()
+    p = agg_delta()
+    good = param_digest(p)
+    bad = param_digest(poison(p))
+    led.record_aggregate(0, "w0", p)
+    led.record_consensus(0, "majority_digest", good, {"w0": good, "w1": bad})
+    led.record_global(0, p)
+    prov = led.provenance(good)
+    assert len(prov) >= 2                      # consensus + global blocks
+    assert led.reputation["w0"] > led.reputation["w1"]
+
+
+def test_ledger_registry():
+    assert get_ledger("none") is None
+    assert isinstance(get_ledger("hashchain"), HashChainLedger)
+    with pytest.raises(KeyError):
+        get_ledger("ethereum-mainnet")

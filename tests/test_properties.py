@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on core system invariants."""
+import os
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _qkv(seed, B, S, H, KV, D):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, S, H, D)),
+            jax.random.normal(ks[1], (B, S, KV, D)),
+            jax.random.normal(ks[2], (B, S, KV, D)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_attention_causality(seed):
+    """Perturbing future K/V must not change past outputs."""
+    q, k, v = _qkv(seed, 1, 64, 4, 2, 16)
+    out1 = ops.flash_attention(q, k, v, 0, True, None, 32, 32)
+    k2 = k.at[:, 48:].add(100.0)
+    v2 = v.at[:, 48:].add(-50.0)
+    out2 = ops.flash_attention(q, k2, v2, 0, True, None, 32, 32)
+    np.testing.assert_allclose(np.asarray(out1[:, :48]),
+                               np.asarray(out2[:, :48]), atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, 49:]), np.asarray(out2[:, 49:]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_attention_batch_permutation_equivariance(seed):
+    q, k, v = _qkv(seed, 4, 32, 4, 4, 16)
+    perm = np.random.RandomState(seed).permutation(4)
+    out = ops.flash_attention(q, k, v, 0, True, None, 32, 32)
+    out_p = ops.flash_attention(q[perm], k[perm], v[perm], 0, True, None,
+                                32, 32)
+    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
+                               atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([16, 32, 64]))
+def test_attention_block_size_invariance(seed, blk):
+    """Flash output must not depend on the tiling."""
+    q, k, v = _qkv(seed, 2, 64, 4, 2, 16)
+    a = ops.flash_attention(q, k, v, 0, True, None, 64, 64)
+    b = ops.flash_attention(q, k, v, 0, True, None, blk, blk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_seq_shard_offset_consistency(seed):
+    """Sharded q rows with the right offsets reproduce the full output."""
+    q, k, v = _qkv(seed, 1, 64, 4, 2, 16)
+    full = ops.flash_attention(q, k, v, 0, True, None, 32, 32)
+    parts = [ops.flash_attention(q[:, i * 16:(i + 1) * 16], k, v, i * 16,
+                                 True, None, 16, 32) for i in range(4)]
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(parts, 1)),
+                               np.asarray(full), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8))
+def test_quantize_scale_invariance_of_sign(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1024,))
+    q1, _ = ops.quantize_blockwise(x, block=128)
+    q2, _ = ops.quantize_blockwise(x * scale, block=128)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_decode_attention_length_monotone(seed):
+    """With length=S decode equals the full-window reference; with length=1
+    it attends only the first position."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, S, H, KV, D = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    out_full = ops.decode_attention(q, k, v, jnp.full((B,), S), block_k=16)
+    want = ref.decode_attention_ref(q, k, v, jnp.full((B,), S))
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(want),
+                               atol=1e-5)
+    out_one = ops.decode_attention(q, k, v, jnp.ones((B,), jnp.int32),
+                                   block_k=16)
+    # attending one position == that position's v (per kv head group)
+    vv = jnp.repeat(v[:, 0], H // KV, axis=1).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out_one), np.asarray(vv),
+                               atol=1e-5)

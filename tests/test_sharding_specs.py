@@ -1,0 +1,58 @@
+"""Spec-table validation: every sharded dim divides the production mesh, and
+the spec tree matches the param tree for all (arch x phase)."""
+import math
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCHS, get_config
+from repro.models import transformer
+from repro.sharding import specs as sspecs
+
+MESH_SIZES = {"data": 16, "model": 16, "pod": 2}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("phase", ["fsdp", "tp", "spatial"])
+def test_specs_match_and_divide(arch, phase):
+    cfg = get_config(arch)
+    shapes = transformer.param_shapes(cfg)
+    specs = sspecs.param_specs(cfg, phase)
+    flat_sh = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    flat_sp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_sh) == len(flat_sp), f"{arch}/{phase}: tree mismatch"
+    for (path, shape), spec in zip(flat_sh, flat_sp):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            factor = math.prod(MESH_SIZES[n] for n in names)
+            assert shape[dim] % factor == 0, (
+                f"{arch}/{phase} {jax.tree_util.keystr(path)}: dim {dim} "
+                f"size {shape[dim]} not divisible by {names}={factor}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_gather_table_consistent(arch):
+    cfg = get_config(arch)
+    table = sspecs.gather_dim_table(cfg)   # asserts internally on conflicts
+    assert isinstance(table, dict) and table
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_invariant_across_phases(arch):
+    """Sharding must never change the parameter count (incl. subgrid packing)."""
+    cfg = get_config(arch)
+    shapes = transformer.param_shapes(cfg)
+    n = sum(math.prod(s) for s in jax.tree.leaves(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)))
+    assert n > 0
+    if cfg.moe is not None and cfg.moe.ep_mode == "subgrid":
+        m = cfg.moe
+        # packed (E*f_sub, D, F/f_sub) == E*D*F
+        blocks = shapes["blocks"]["moe"]["w1"]
+        L = blocks[0]
+        assert blocks[1] == m.n_experts * m.f_sub
+        assert blocks[3] == m.expert_d_ff // m.f_sub
