@@ -40,6 +40,75 @@ def comm_bytes_per_round(params, fl: FLConfig) -> float:
     return per_worker * max(fl.n_workers, 1)
 
 
+def bench_driver(arch: str = "flsim-mlp", n_clients: int = 16,
+                 rounds: int = 20, chunks=(1, 10), n_items: int = 512,
+                 seed: int = 0, out_path: str = "BENCH_driver.json"):
+    """Rounds/sec for the device-resident multi-round driver, chunked vs
+    unchunked, on a paper-scale (flsim_small) CPU config.
+
+    For each chunk size the same Executor path runs ``rounds`` rounds after a
+    warm-up launch (compile excluded). Because chunked and unchunked runs are
+    bitwise-identical by the driver contract, the delta is pure host+dispatch
+    overhead; ``host_overhead_frac`` = the fraction of the unchunked
+    per-round wall time that chunking eliminates. Writes ``out_path`` and
+    prints one CSV row per chunk size.
+    """
+    import json
+
+    from repro.core.jobs import load_job
+    from repro.runtime.executor import Executor
+
+    assert chunks[0] == 1, \
+        "chunks must start with 1 (the speedup/overhead baselines are " \
+        "defined vs unchunked execution)"
+    assert all(rounds % c == 0 for c in chunks), \
+        "rounds must be a multiple of every chunk size (keeps the timed " \
+        "region free of remainder-length compiles)"
+
+    results = {"config": {"arch": arch, "n_clients": n_clients,
+                          "rounds": rounds, "n_items": n_items,
+                          "seed": seed, "backend": jax.default_backend()},
+               "runs": {}}
+    for chunk in chunks:
+        job = load_job({
+            "name": f"bench-driver-c{chunk}",
+            "model": {"arch": arch},
+            "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                        "distribution": {"partition": "dirichlet",
+                                         "dirichlet_alpha": 0.5}},
+            "strategy": {"strategy": "fedavg",
+                         "train_params": {"n_clients": n_clients,
+                                          "local_epochs": 1,
+                                          "client_lr": 0.1,
+                                          "rounds": rounds + chunk,
+                                          "seed": seed,
+                                          "rounds_per_launch": chunk}},
+        })
+        ex = Executor(job).scaffold()
+        ex.run(rounds=chunk)                      # warm-up: compile + stage
+        t0 = time.time()
+        ex.run(rounds=chunk + rounds)
+        dt = time.time() - t0
+        results["runs"][str(chunk)] = {"rounds": rounds, "wall_s": dt,
+                                       "rounds_per_s": rounds / dt,
+                                       "s_per_round": dt / rounds}
+    runs = results["runs"]
+    base = runs[str(chunks[0])]
+    for chunk in chunks:
+        r = runs[str(chunk)]
+        r["speedup_vs_chunk1"] = r["rounds_per_s"] / base["rounds_per_s"]
+        r["host_overhead_frac"] = max(
+            0.0, 1.0 - r["s_per_round"] / base["s_per_round"])
+        print(f"driver_chunk{chunk},{r['s_per_round']*1e6:.0f},"
+              f"rounds_per_s={r['rounds_per_s']:.2f};"
+              f"speedup={r['speedup_vs_chunk1']:.2f};"
+              f"host_overhead={r['host_overhead_frac']:.2f}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run_fl(fl: FLConfig, arch: str = "flsim-cnn", n_items: int = 768,
            rounds: int = 8, batch: int = 16, steps: int = 1,
            eval_n: int = 256, arch_cfg=None, run_name: str = "run"):

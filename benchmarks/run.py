@@ -37,9 +37,12 @@ def main() -> None:
                     help="fewer rounds / smaller sizes")
     ap.add_argument("--only", default="all")
     args = ap.parse_args()
-    from benchmarks import figures
+    from benchmarks import figures, flbench
     q = args.quick
     jobs = {
+        # --quick keeps the flsim_small config shape (the host-overhead
+        # share depends on it) and only cuts the timed rounds
+        "driver": lambda: flbench.bench_driver(rounds=10 if q else 20),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

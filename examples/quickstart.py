@@ -24,8 +24,13 @@ JOB = {
     },
     "strategy": {
         "strategy": "fedavg",
+        # rounds_per_launch=5 fuses all 5 rounds into ONE compiled launch
+        # (lax.scan); batches + cohorts are derived on device, the host only
+        # sees the chunk boundary. placement can be "temporal" to run one
+        # client at a time over the whole mesh instead.
         "train_params": {"n_clients": 8, "local_epochs": 2,
-                         "client_lr": 0.05, "rounds": 5, "seed": 0},
+                         "client_lr": 0.05, "rounds": 5, "seed": 0,
+                         "rounds_per_launch": 5, "placement": "spatial"},
     },
     "runtime": {"straggler_prob": 0.1, "straggler_overprovision": 1.25},
 }

@@ -163,6 +163,10 @@ class FLConfig:
     strategy: str = "fedavg"          # core strategy name
     topology: str = "client_server"   # client_server | hierarchical | decentralized
     placement: str = "auto"           # spatial | temporal | auto
+    # rounds fused into one compiled launch (lax.scan); host I/O (checkpoint,
+    # ledger, eval, logging) happens only at chunk boundaries. 1 == per-round
+    # host loop; chunked and unchunked runs are bitwise-identical by contract.
+    rounds_per_launch: int = 1
     n_clients: int = 16               # virtual clients (cohort per round)
     cohort: int = 0                   # 0 -> all clients each round
     local_epochs: int = 1

@@ -24,3 +24,18 @@ def client_key(key, client_id) -> jax.Array:
 
 def step_key(key, step) -> jax.Array:
     return jax.random.fold_in(jax.random.fold_in(key, 0x57E), step)
+
+
+def batch_key(round_key_, client_id) -> jax.Array:
+    """Key for a client's on-device batch draw in one round. Derived from the
+    round key so the device-resident driver samples identical batches for a
+    given (seed, round) regardless of how rounds are chunked into launches."""
+    return jax.random.fold_in(jax.random.fold_in(round_key_, 0xBA7C),
+                              client_id)
+
+
+def cohort_key(seed, round_idx) -> jax.Array:
+    """Key for cohort selection / fault outcomes in one round. ``round_idx``
+    may be a traced scalar (the multi-round scan passes it in-program)."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(0xC047), seed), round_idx)

@@ -209,7 +209,8 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
                 model, ctx, strategy, fl, params, server_state, (),
                 cbatch, key, gather_fn, grad_sync)
             w = weights[i]
-            acc = tree_add(acc, tree_scale(delta, w / weights.sum()))
+            acc = tree_add(acc, tree_scale(
+                delta, w / jnp.maximum(weights.sum(), 1e-12)))
             return acc, loss_acc + loss / C_t
 
         if C_t == 1:
@@ -238,6 +239,70 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
         return new_state, {"loss": loss}
 
     return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Device-resident multi-round driver
+# ---------------------------------------------------------------------------
+
+def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
+                      placement: str = "spatial", fault=None,
+                      batch_size: int = 32):
+    """Fuse ``rounds_per_launch`` FL rounds into one compiled program.
+
+    Wraps a single-round program (spatial or temporal) in a ``jax.lax.scan``
+    whose body does, *inside* the compiled program, everything the host loop
+    used to do per round:
+
+    - per-round batch gather from the partition tensors staged on device once
+      (``data.pipeline.stage_partitions``), indices derived from
+      ``determinism.round_key`` so chunking cannot change the data stream;
+    - cohort selection with deadline-drop straggler semantics as a weight
+      mask (``runtime.faults.cohort_mask``) — dropped clients get zero weight
+      with no host round-trip.
+
+    Returns ``multi_fn(ctx, state, staged, root, start_round, n_rounds)``
+    -> ``(state, metrics)`` where ``n_rounds`` must be a Python int (it is
+    the scan length; jit with it closed over or static) and every metric
+    comes back stacked with a leading ``n_rounds`` dim.
+
+    Determinism contract: because each round's randomness is keyed only by
+    ``(root, absolute round index)``, a run chunked as e.g. 10+10 rounds is
+    bitwise-identical to 20 launches of 1 round (asserted by
+    tests/test_driver.py).
+    """
+    from repro.data.pipeline import gather_client_batches
+    from repro.runtime.faults import FaultModel, cohort_mask
+
+    if placement == "temporal":
+        if cfg is None:
+            raise ValueError("temporal placement needs the ModelConfig "
+                             "(sharding specs are derived from it)")
+        single = build_temporal_round(model, strategy, fl, cfg)
+    elif placement == "spatial":
+        single = build_spatial_round(model, strategy, fl)
+    else:
+        raise ValueError(f"unknown placement {placement!r} "
+                         "(want 'spatial' or 'temporal')")
+    fault = fault if fault is not None else FaultModel(seed=fl.seed)
+    steps = max(fl.local_steps, 1)
+    target = int(fl.cohort or fl.n_clients)
+
+    def multi_fn(ctx: AxisCtx, state, staged, root, start_round,
+                 n_rounds: int):
+        base_w = staged["len"].astype(jnp.float32)
+
+        def body(st, r):
+            rkey = determinism.round_key(root, r)
+            batch = gather_client_batches(staged, rkey, batch_size, steps)
+            mask = cohort_mask(fault, r, fl.n_clients, target,
+                               fl.straggler_overprovision)
+            return single(ctx, st, batch, base_w * mask, rkey)
+
+        rounds = start_round + jnp.arange(n_rounds)
+        return jax.lax.scan(body, state, rounds)
+
+    return multi_fn
 
 
 def init_state(model, strategy: Strategy, fl: FLConfig, key,

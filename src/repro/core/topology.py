@@ -82,7 +82,7 @@ class Decentralized:
             n = 1
             for axis in (ctx.model, ctx.data):
                 if axis is not None:
-                    sz = jax.lax.axis_size(axis)
+                    sz = ctx.size(axis)
                     right = jax.lax.ppermute(
                         mixed, axis, [(i, (i + 1) % sz) for i in range(sz)])
                     left = jax.lax.ppermute(

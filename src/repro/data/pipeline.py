@@ -15,9 +15,62 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import determinism
 from repro.data import partition as part_mod
+
+
+# ---------------------------------------------------------------------------
+# Device-resident staging (the "download once" half of the driver contract)
+# ---------------------------------------------------------------------------
+
+def stage_partitions(x, y, parts):
+    """One-time device staging of the full root dataset + client partitions.
+
+    The ragged per-client index lists are padded to a dense (C, Lmax) int32
+    matrix by cyclic repetition (a client with fewer items than the pad just
+    wraps; the wrap never biases sampling because the on-device gather draws
+    positions modulo the *true* length). Returns a dict of device arrays:
+
+      x    (N, ...)  root features        y    (N,)      root labels
+      idx  (C, Lmax) padded item indices  len  (C,)      true partition sizes
+
+    ``len`` doubles as the FedAvg base weight, so zero-item clients get zero
+    weight automatically.
+    """
+    n_clients = len(parts)
+    lmax = max(max((len(p) for p in parts), default=1), 1)
+    idx = np.zeros((n_clients, lmax), np.int32)
+    for c, p in enumerate(parts):
+        if len(p):
+            reps = int(np.ceil(lmax / len(p)))
+            idx[c] = np.concatenate([p] * reps)[:lmax]
+    lens = np.asarray([len(p) for p in parts], np.int32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y),
+            "idx": jnp.asarray(idx), "len": jnp.asarray(lens)}
+
+
+def gather_client_batches(staged, round_key, batch_size: int, n_steps: int):
+    """Jittable per-round batch gather for every client, on device.
+
+    Positions are drawn uniformly (with replacement) from each client's true
+    partition via ``determinism.batch_key(round_key, client)``, so the batch
+    stream for a given (seed, round) is identical no matter how rounds are
+    chunked into launches. Returns {"x": (C, n_steps, B, ...), "y": ...}.
+    """
+    n_clients = staged["idx"].shape[0]
+
+    def per_client(c):
+        key = determinism.batch_key(round_key, c)
+        maxv = jnp.maximum(staged["len"][c], 1)
+        pos = jax.random.randint(key, (n_steps, batch_size), 0, maxv)
+        sel = staged["idx"][c, pos]
+        return {"x": staged["x"][sel], "y": staged["y"][sel]}
+
+    return jax.vmap(per_client)(jnp.arange(n_clients))
 
 
 @dataclasses.dataclass

@@ -1,10 +1,19 @@
 """Host-level FL executor — the faithful rendering of paper Algorithm 1.
 
 The Logic Controller's ProcessPhase x NodeStage machine survives here as the
-*host* round loop: everything that is genuinely I/O (data staging, straggler
-deadlines, checkpoint/restart, ledger records, dashboards). The compiled
-round program (core/rounds.py) is the part that was polling/signalling in
-the paper and is now a single XLA program.
+*host* chunk loop: everything that is genuinely I/O (checkpoint/restart,
+ledger records, eval, dashboards). Everything that used to be per-round host
+work — batch staging, cohort selection, straggler deadlines — now runs
+*inside* the compiled program: ``core/rounds.build_multi_round`` scans
+``fl.rounds_per_launch`` rounds per launch over partition tensors staged on
+device once in ``scaffold()``, so the host only wakes up at chunk
+boundaries. ``rounds_per_launch=1`` recovers the per-round host loop, and by
+the driver's determinism contract both chunkings produce bitwise-identical
+params for the same seed.
+
+``fl.placement`` selects the client placement: "spatial" (clients vmapped
+across the grid, the seed default) or "temporal" (one client at a time uses
+the whole mesh); "auto" resolves to spatial.
 
 ProcessPhase: 0=init 1=local-learning 2=aggregation (paper §2.3).
 NodeStage:    0=not-ready 1=ready-for-job 2=ready-with-dataset
@@ -17,16 +26,15 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_mod
 from repro.core import determinism
 from repro.core.blockchain import param_digest
 from repro.core.kvstore import KVStore
-from repro.core.rounds import build_spatial_round, init_state
+from repro.core.rounds import build_multi_round, init_state
+from repro.data.pipeline import stage_partitions
 from repro.metrics.logger import PerformanceLogger
-from repro.runtime.faults import select_cohort
 from repro.sharding.axes import AxisCtx
 
 
@@ -41,10 +49,22 @@ class Executor:
     def __post_init__(self):
         self.kv = KVStore()
         self.logger = self.logger or PerformanceLogger(run_name=self.job.name)
-        self.round_fn = jax.jit(
-            lambda s, b, w, r: build_spatial_round(
-                self.job.model, self.job.strategy, self.job.fl)(
-                self.ctx, s, b, w, r))
+        fl = self.job.fl
+        self.placement = fl.placement if fl.placement != "auto" else "spatial"
+        self._multi = build_multi_round(
+            self.job.model, self.job.strategy, fl,
+            cfg=getattr(self.job.model, "cfg", None),
+            placement=self.placement, fault=self.job.fault)
+        self._programs = {}               # scan length -> jitted program
+
+    def _round_program(self, n_rounds: int):
+        """Jitted n_rounds-launch; at most two lengths ever compile (the
+        chunk size and one remainder)."""
+        if n_rounds not in self._programs:
+            self._programs[n_rounds] = jax.jit(
+                lambda s, staged, root, start, n=n_rounds:
+                self._multi(self.ctx, s, staged, root, start, n))
+        return self._programs[n_rounds]
 
     # -- Alg. 1 lines 1-15: scaffold ------------------------------------
     def scaffold(self):
@@ -55,8 +75,11 @@ class Executor:
             self.kv.set_node_stage(n, 1)
         x, y, parts = self.job.dataset.distribute_into_chunks(
             fl.partition, fl.n_clients, fl.dirichlet_alpha)
-        self.data = (x, y, parts)
-        for n in nodes:                      # "DownloadDataset"
+        self.data = (x, y, parts)   # host view, kept for eval_fn consumers
+        # "DownloadDataset": the one-time device staging of the full client
+        # partition — the round loop never touches host data after this.
+        self.staged = stage_partitions(x, y, parts)
+        for n in nodes:
             self.kv.set_node_stage(n, 2)
         self.nodes = nodes
         key = determinism.root_key(fl.seed)
@@ -72,56 +95,52 @@ class Executor:
                 self.round_idx = extra["next_round"]
         return self
 
-    # -- Alg. 1 lines 16-57: round loop ----------------------------------
+    # -- Alg. 1 lines 16-57: chunked round loop ---------------------------
     def run(self, rounds: Optional[int] = None):
         fl = self.job.fl
         rounds = rounds or fl.rounds
-        x, y, parts = self.data
         root = determinism.root_key(fl.seed)
+        chunk = max(fl.rounds_per_launch, 1)
         while self.round_idx < rounds:
-            r = self.round_idx
-            rkey = determinism.round_key(root, r)
-            # phase 1: cohort selection with straggler mitigation
+            start = self.round_idx
+            n = min(chunk, rounds - start)
+            # phase 1+2 (cohort selection, local learning, aggregation) all
+            # happen inside the compiled multi-round program
             self.kv.set_process_phase(1)
-            target = fl.cohort or fl.n_clients
-            cohort = select_cohort(self.job.fault, r,
-                                   np.arange(fl.n_clients), target,
-                                   fl.straggler_overprovision)
-            batches, weights = [], []
-            for c in range(fl.n_clients):
-                steps = max(fl.local_steps, 1)
-                b, _ = type(self.job.dataset).client_batches(
-                    x, y, parts[c], batch_size=min(32, len(parts[c])),
-                    n_steps=steps, seed=fl.seed * 7919 + c + r * 104729)
-                batches.append(b)
-                # dropped/straggler clients get zero weight (unbiased drop)
-                weights.append(float(len(parts[c])) if c in cohort else 0.0)
-            batch = jax.tree.map(lambda *t: np.stack(t), *batches)
-            weights = jnp.asarray(weights, jnp.float32)
-            for n in self.nodes:
-                self.kv.set_node_stage(n, 3)
-            # phases 1->2 happen inside the compiled round
+            for node in self.nodes:
+                self.kv.set_node_stage(node, 3)
             self.kv.set_process_phase(2)
             t0 = time.time()
-            self.state, metrics = self.round_fn(self.state, batch, weights,
-                                                rkey)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            state, metrics = self._round_program(n)(
+                self.state, self.staged, root, start)
+            state = jax.block_until_ready(state)
             dt = time.time() - t0
-            for n in self.nodes:
-                self.kv.set_node_stage(n, 4)
-            # ledger: provenance of the chosen global model
+            self.state = state
+            for node in self.nodes:
+                self.kv.set_node_stage(node, 4)
+            # -- host I/O, chunk boundary only ----------------------------
+            last = start + n - 1
             if self.job.ledger is not None:
                 dig = param_digest(self.state["params"])
-                self.job.ledger.record_global(r, self.state["params"])
-                self.kv.publish(f"global_digest/{r}", dig)
-            row = dict(metrics, round_s=dt)
+                self.job.ledger.record_global(last, self.state["params"])
+                self.kv.publish(f"global_digest/{last}", dig)
+            eval_row = {}
             if self.eval_fn is not None:
-                row.update({k: float(v) for k, v in
-                            self.eval_fn(self.state["params"]).items()})
-            self.logger.log_round(r, **row)
-            self.round_idx += 1
+                eval_row = {k: float(v) for k, v in
+                            self.eval_fn(self.state["params"]).items()}
+            stacked = {k: np.asarray(v) for k, v in metrics.items()}
+            for i in range(n):
+                row = {k: float(v[i]) for k, v in stacked.items()}
+                row["round_s"] = dt / n
+                if i == n - 1:
+                    row.update(eval_row)
+                self.logger.log_round(start + i, **row)
+            self.round_idx += n
+            # save when this chunk crossed a checkpoint_every multiple (the
+            # cadence survives chunk sizes that don't divide it)
             if self.ckpt_dir and fl.checkpoint_every and \
-                    self.round_idx % fl.checkpoint_every == 0:
+                    start // fl.checkpoint_every != \
+                    self.round_idx // fl.checkpoint_every:
                 ckpt_mod.save(self.ckpt_dir, self.round_idx, self.state,
                               extra={"next_round": self.round_idx},
                               async_write=False)

@@ -1,15 +1,24 @@
 """Fault injection + straggler simulation (paper Alg. 1 timeout() semantics,
 scaled to 1000+-node thinking).
 
-The host executor asks this module, per round, which cohort members respond
-in time. Deterministic given the seed — so fault-tolerance tests can assert
-bitwise-reproducible recovery.
+The deadline-drop semantics live in ``cohort_mask`` — a *jittable* weight
+mask, so the device-resident multi-round driver (core/rounds.py
+``build_multi_round``) can select cohorts inside the compiled program with
+no host round-trips. The host-side ``select_cohort`` is a thin wrapper over
+the same function and therefore agrees with the in-program mask bit-for-bit
+(regression-tested in tests/test_driver.py). Deterministic given the seed —
+so fault-tolerance tests can assert bitwise-reproducible recovery.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core import determinism
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,30 +30,52 @@ class FaultModel:
     seed: int = 0
 
     def round_outcome(self, round_idx: int, client_ids):
-        """Returns (alive_mask, sim_durations). Durations ~ lognormal with
-        stragglers inflated; the executor keeps the first-K by duration."""
-        rng = np.random.RandomState(self.seed * 1_000_003 + round_idx)
-        n = len(client_ids)
-        alive = rng.rand(n) >= self.drop_prob
-        dur = rng.lognormal(mean=0.0, sigma=0.25, size=n)
-        stragglers = rng.rand(n) < self.straggler_prob
-        dur = np.where(stragglers, dur * self.straggler_slowdown, dur)
-        return alive, dur
+        """Returns (alive_mask, sim_durations) as numpy arrays. Durations are
+        lognormal with stragglers inflated; the deadline keeps the first-K."""
+        _, k_out = jax.random.split(determinism.cohort_key(self.seed,
+                                                           round_idx))
+        alive, dur = _outcome(self, k_out, len(client_ids))
+        return np.asarray(alive), np.asarray(dur)
+
+
+def _outcome(fault: FaultModel, key, n: int):
+    """Jittable (alive, duration) draw for ``n`` clients."""
+    k_alive, k_dur, k_strag = jax.random.split(key, 3)
+    alive = jax.random.uniform(k_alive, (n,)) >= fault.drop_prob
+    dur = jnp.exp(0.25 * jax.random.normal(k_dur, (n,)))
+    strag = jax.random.uniform(k_strag, (n,)) < fault.straggler_prob
+    dur = jnp.where(strag, dur * fault.straggler_slowdown, dur)
+    return alive, dur
+
+
+def cohort_mask(fault: FaultModel, round_idx, n_clients: int, target: int,
+                overprovision: float = 1.0):
+    """Over-provisioned cohort with deadline-drop as a float32 weight mask.
+
+    Jittable: ``round_idx`` may be a traced scalar (it is, inside the
+    multi-round scan). Samples ceil(target*overprovision) clients without
+    replacement, drops the dead, keeps the ``target`` fastest survivors; if
+    fewer than target survive, the survivors are kept and the aggregator's
+    weight normalization makes the drop unbiased under random failures.
+    Returns shape (n_clients,): 1.0 for kept clients, 0.0 otherwise.
+    """
+    want = int(min(math.ceil(target * overprovision), n_clients))
+    key = determinism.cohort_key(fault.seed, round_idx)
+    k_pool, k_out = jax.random.split(key)
+    perm = jax.random.permutation(k_pool, n_clients)
+    in_pool = jnp.zeros((n_clients,), bool).at[perm[:want]].set(True)
+    alive, dur = _outcome(fault, k_out, n_clients)
+    eligible = in_pool & alive
+    dur = jnp.where(eligible, dur, jnp.inf)
+    rank = jnp.argsort(jnp.argsort(dur))   # rank of each client by duration
+    kept = eligible & (rank < target)
+    return kept.astype(jnp.float32)
 
 
 def select_cohort(fault: FaultModel, round_idx: int, client_ids,
                   target: int, overprovision: float = 1.0):
-    """Over-provisioned cohort with deadline-drop (straggler mitigation):
-    sample ceil(target*overprovision) clients, keep the ``target`` fastest
-    alive ones; if fewer than target survive, keep the survivors and
-    re-normalize weights (unbiased under random failures)."""
-    want = int(np.ceil(target * overprovision))
-    rng = np.random.RandomState(0xC0047 + round_idx)
-    pool = rng.choice(client_ids, size=min(want, len(client_ids)),
-                      replace=False)
-    alive, dur = fault.round_outcome(round_idx, pool)
-    surv = pool[alive]
-    dur = dur[alive]
-    order = np.argsort(dur)
-    kept = surv[order[:target]]
-    return np.sort(kept)
+    """Host view of ``cohort_mask``: the sorted kept client ids."""
+    client_ids = np.asarray(client_ids)
+    mask = np.asarray(cohort_mask(fault, round_idx, len(client_ids),
+                                  int(target), overprovision))
+    return np.sort(client_ids[mask > 0])

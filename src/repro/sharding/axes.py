@@ -35,7 +35,9 @@ class AxisCtx:
     def size(self, name: Optional[str]) -> int:
         if name is None:
             return 1
-        return jax.lax.axis_size(name)
+        if hasattr(jax.lax, "axis_size"):
+            return jax.lax.axis_size(name)
+        return jax.core.axis_frame(name)         # older jax: returns the size
 
     def index(self, name: Optional[str]):
         if name is None:

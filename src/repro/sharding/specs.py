@@ -254,6 +254,8 @@ def make_grad_sync(cfg: ModelConfig, ctx):
     """Spec-aware gradient sync for the temporal round: pmean over the batch
     axes (pod, data) for every leaf NOT sharded over them (grid-EP expert
     grads are data-local by construction — their tokens arrived via a2a)."""
+    if ctx.pod is None and ctx.data is None:
+        return lambda g: g        # meshless (CPU-scale) path: nothing to sync
     specs = param_specs(cfg, "fsdp")
 
     def sync(grads):

@@ -1,6 +1,8 @@
 """Dataset distribution (paper component 3) + reproducibility (RQ6) tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="partition property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -17,6 +17,10 @@ import pytest
 from repro.core.jobs import load_job
 from repro.runtime.executor import Executor
 
+# end-to-end system runs (including a forced-device subprocess compile) are
+# nightly-tier; CI runs them on the cron, not on every push
+pytestmark = pytest.mark.slow
+
 
 JOB_YAML = """
 name: system-test
@@ -131,8 +135,8 @@ def test_dryrun_machinery_on_forced_devices():
         "from repro.configs.reduce import reduced_config;"
         "from repro.launch import steps, hlo_cost;"
         "from repro.launch.dryrun import collective_bytes;"
-        "mesh=jax.make_mesh((2,2),('data','model'),"
-        "axis_types=(jax.sharding.AxisType.Auto,)*2);"
+        "from repro.launch.mesh import make_test_mesh;"
+        "mesh=make_test_mesh((2,2),('data','model'));"
         "cfg=reduced_config(get_config('yi-34b'));"
         "b=steps.make_step_from_cfg(cfg, ShapeConfig('t',32,8,'train'), mesh);"
         "c=jax.jit(b.fn, donate_argnums=b.donate).lower(*b.inputs).compile();"
