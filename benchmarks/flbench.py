@@ -109,6 +109,99 @@ def bench_driver(arch: str = "flsim-mlp", n_clients: int = 16,
     return results
 
 
+def bench_async(arch: str = "flsim-mlp", n_clients: int = 16,
+                events: int = 256, chunk_events: int = 64,
+                n_items: int = 512, seed: int = 0,
+                out_path: str = "BENCH_async.json"):
+    """Events/sec for the event-driven async subsystem, chunked vs
+    per-event, on a paper-scale (flsim_small) CPU config.
+
+    The same compiled event-scan body runs the same ``events`` server
+    events two ways: one launch per event (the host-loop rendering of an
+    async server) and ``chunk_events`` events fused per launch (the
+    device-resident rendering). By the async determinism contract both
+    trajectories are bitwise-identical, so the delta is pure host+dispatch
+    overhead. Writes ``out_path`` and prints one CSV row per granularity.
+    """
+    import json
+
+    from repro.core.async_rounds import async_init_state, build_async_multi
+    from repro.core.jobs import load_job
+    from repro.core.rounds import init_state
+    from repro.data.pipeline import stage_partitions
+    from repro.runtime.clock import build_schedule
+    from repro.sharding.axes import AxisCtx
+
+    assert events % chunk_events == 0, \
+        "events must be a multiple of chunk_events (keeps the timed " \
+        "region free of remainder-length compiles)"
+    job = load_job({
+        "name": "bench-async",
+        "model": {"arch": arch},
+        "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                    "distribution": {"partition": "dirichlet",
+                                     "dirichlet_alpha": 0.5}},
+        "strategy": {"strategy": "fedavg",
+                     "train_params": {"n_clients": n_clients,
+                                      "client_lr": 0.1, "seed": seed,
+                                      "mode": "async", "async_buffer": 8,
+                                      "staleness_exponent": 0.5,
+                                      "max_staleness": 8}},
+        "runtime": {"straggler_prob": 0.1, "duration_sigma": 0.25},
+    })
+    fl = job.fl
+    x, y, parts = job.dataset.distribute_into_chunks(
+        fl.partition, fl.n_clients, fl.dirichlet_alpha)
+    staged = stage_partitions(x, y, parts)
+    warm = chunk_events
+    sched = build_schedule(job.fault, fl.n_clients, warm + events,
+                           np.asarray(staged["len"], np.float32),
+                           buffer_size=fl.async_buffer,
+                           staleness_exponent=fl.staleness_exponent,
+                           max_staleness=fl.max_staleness)
+    sched_dev = sched.device_arrays()
+    multi = build_async_multi(job.model, job.strategy, fl)
+    root = determinism.root_key(fl.seed)
+    state0 = async_init_state(
+        init_state(job.model, job.strategy, fl, root), sched.ring)
+
+    def timed(n_per_launch: int) -> float:
+        prog = jax.jit(lambda s, start, n=n_per_launch:
+                       multi(AxisCtx(), s, staged, sched_dev, root, start, n))
+        state = state0
+        for e0 in range(0, warm, n_per_launch):   # warm-up: compile + stage
+            state, _ = prog(state, e0)
+        state = jax.block_until_ready(state)
+        t0 = time.time()
+        for e0 in range(warm, warm + events, n_per_launch):
+            state, _ = prog(state, e0)
+        jax.block_until_ready(state)
+        return time.time() - t0
+
+    results = {"config": {"arch": arch, "n_clients": n_clients,
+                          "events": events, "chunk_events": chunk_events,
+                          "n_items": n_items, "seed": seed,
+                          "async_buffer": fl.async_buffer,
+                          "backend": jax.default_backend()},
+               "runs": {}}
+    for n in (1, chunk_events):
+        dt = timed(n)
+        results["runs"][str(n)] = {"events": events, "wall_s": dt,
+                                   "events_per_s": events / dt,
+                                   "s_per_event": dt / events}
+    base = results["runs"]["1"]
+    for n in (1, chunk_events):
+        r = results["runs"][str(n)]
+        r["speedup_vs_per_event"] = r["events_per_s"] / base["events_per_s"]
+        print(f"async_chunk{n},{r['s_per_event']*1e6:.0f},"
+              f"events_per_s={r['events_per_s']:.2f};"
+              f"speedup={r['speedup_vs_per_event']:.2f}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run_fl(fl: FLConfig, arch: str = "flsim-cnn", n_items: int = 768,
            rounds: int = 8, batch: int = 16, steps: int = 1,
            eval_n: int = 256, arch_cfg=None, run_name: str = "run"):

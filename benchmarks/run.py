@@ -43,6 +43,8 @@ def main() -> None:
         # --quick keeps the flsim_small config shape (the host-overhead
         # share depends on it) and only cuts the timed rounds
         "driver": lambda: flbench.bench_driver(rounds=10 if q else 20),
+        "async": lambda: flbench.bench_async(
+            events=64 if q else 256, chunk_events=16 if q else 64),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

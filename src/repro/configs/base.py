@@ -167,6 +167,15 @@ class FLConfig:
     # ledger, eval, logging) happens only at chunk boundaries. 1 == per-round
     # host loop; chunked and unchunked runs are bitwise-identical by contract.
     rounds_per_launch: int = 1
+    # execution mode: "sync" = round-synchronous (the paper's Alg. 1);
+    # "async" = event-driven over a virtual clock (core/async_rounds.py).
+    # Async "rounds" are logging/chunking units of events_per_round server
+    # events (= async_buffer for FedBuff, n_clients for FedAsync).
+    mode: str = "sync"
+    async_buffer: int = 0             # <=1 -> FedAsync; K>1 -> FedBuff(K)
+    staleness_exponent: float = 0.0   # alpha_s = (1+staleness)^-exponent
+    max_staleness: int = 8            # older arrivals are discarded
+    async_concurrency: int = 0        # clients in flight (0 -> all)
     n_clients: int = 16               # virtual clients (cohort per round)
     cohort: int = 0                   # 0 -> all clients each round
     local_epochs: int = 1

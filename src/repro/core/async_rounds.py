@@ -1,0 +1,129 @@
+"""Event-driven asynchronous FL servers (FedAsync / FedBuff), rendered the
+same way PR 1 rendered sync rounds: as one compiled ``lax.scan``.
+
+The scan runs over *server events* — one completed client task per step,
+ordered by the virtual clock (``runtime/clock.build_schedule``). Each step,
+entirely on device:
+
+1. gathers the arriving client's batch from the partitions staged on device
+   (``data/pipeline.gather_one_client_batch`` — bitwise the same draw as the
+   sync driver's vmapped gather, keyed by (root, task index, client));
+2. trains against the **stale snapshot** the client dispatched with — a ring
+   buffer of the last ``max_staleness + 1`` server versions, indexed by the
+   schedule's precomputed ring slot;
+3. folds the staleness-weighted update into the accumulator and, when the
+   schedule says so, applies it through the existing
+   ``Strategy.server_update`` machinery and writes the new version into the
+   ring.
+
+Two async servers share the one scan body, selected by
+``FLConfig.async_buffer``:
+
+- **FedAsync** (buffer <= 1): every accepted arrival applies immediately;
+  the update is the mixing form ``alpha_s * (client_model - server_params)``
+  with ``alpha_s = (1 + staleness)^-staleness_exponent`` (Xie et al.).
+- **FedBuff** (buffer K > 1): arrivals accumulate the staleness-and-size
+  weighted mean of K client deltas, then one server update fires
+  (Nguyen et al.). With buffer == cohort, zero staleness discount and equal
+  client speeds this is *bitwise* synchronous FedAvg (temporal placement) —
+  the identity test in tests/test_async.py.
+
+Determinism contract (same as the sync driver): every event's randomness is
+keyed by (root, client, absolute task index) and the schedule is
+host-precomputed from the seed, so a run chunked as N events per launch is
+bitwise-identical to per-event launches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import determinism
+from repro.core.rounds import local_train
+from repro.core.strategy import Strategy, tree_add, tree_scale, tree_zeros_like
+from repro.data.pipeline import gather_one_client_batch
+from repro.sharding.axes import AxisCtx
+
+
+def async_init_state(state: dict, ring: int) -> dict:
+    """Augment a sync init_state with the async carries.
+
+    ``hist`` is the param-version ring (every slot starts at version 0, so
+    staleness-0 reads are exact); ``acc`` is the open buffer accumulator
+    (carried across launch boundaries so chunking can split a buffer group
+    without changing the trajectory).
+    """
+    params = state["params"]
+    hist = jax.tree.map(lambda t: jnp.repeat(t[None], ring, axis=0), params)
+    acc = jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), params)
+    return dict(state, hist=hist, acc=acc)
+
+
+def build_async_multi(model, strategy: Strategy, fl: FLConfig,
+                      batch_size: int = 32):
+    """Fuse ``n_events`` server events into one compiled program.
+
+    Returns ``multi_fn(ctx, state, staged, sched, root, start_event,
+    n_events)`` -> ``(state, metrics)``. ``sched`` is the full schedule
+    staged on device (``EventSchedule.device_arrays()``); the launch slices
+    its own event window in-program, so the host only supplies the start
+    offset. ``n_events`` must be a Python int (the scan length). Metrics
+    come back stacked with a leading ``n_events`` dim.
+
+    ``state`` needs the async carries from ``async_init_state``.
+    """
+    steps = max(fl.local_steps, 1)
+    fedbuff = max(fl.async_buffer, 1) > 1
+
+    def multi_fn(ctx: AxisCtx, state, staged, sched, root, start_event,
+                 n_events: int):
+        xs = {k: jax.lax.dynamic_slice_in_dim(v, start_event, n_events)
+              for k, v in sched.items()}
+
+        def body(st, ev):
+            params, server = st["params"], st["server"]
+            hist, acc = st["hist"], st["acc"]
+            c = ev["client"]
+            rkey = determinism.round_key(root, ev["task"])
+            stale = jax.tree.map(lambda h: h[ev["read_slot"]], hist)
+            cbatch = gather_one_client_batch(staged, rkey, c, batch_size,
+                                             steps)
+            key = determinism.client_key(rkey, c)
+            delta, _, loss = local_train(model, ctx, strategy, fl, stale,
+                                         server, (), cbatch, key)
+            if fedbuff:
+                contrib = tree_scale(delta, ev["coeff"])
+            else:
+                # FedAsync mixing form: alpha * (client_model - server)
+                # == alpha * ((stale - params) + delta); the drift term
+                # pulls the server toward the client's (stale) start point.
+                contrib = jax.tree.map(
+                    lambda s_, p, d: ev["coeff"]
+                    * ((s_.astype(jnp.float32) - p.astype(jnp.float32)) + d),
+                    stale, params, delta)
+            acc = tree_add(acc, contrib)
+
+            def do_apply(op):
+                params, server, acc, hist = op
+                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), acc,
+                                   params)
+                new_p, new_s = strategy.server_update(params, agg, server)
+                hist = jax.tree.map(
+                    lambda h, p: h.at[ev["write_slot"]].set(p), hist, new_p)
+                return new_p, new_s, tree_zeros_like(acc), hist
+
+            params, server, acc, hist = jax.lax.cond(
+                ev["apply"], do_apply, lambda op: op,
+                (params, server, acc, hist))
+            new_st = dict(st, params=params, server=server, hist=hist,
+                          acc=acc)
+            metrics = {"loss": loss,
+                       "staleness": ev["staleness"].astype(jnp.float32),
+                       "applied": ev["apply"].astype(jnp.float32),
+                       "client": ev["client"].astype(jnp.float32)}
+            return new_st, metrics
+
+        return jax.lax.scan(body, state, xs)
+
+    return multi_fn

@@ -16,10 +16,21 @@ The consensus callable signature matches the paper's Fig. 5:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _projection(leaf_idx: int, width: int, n_proj: int):
+    """Per-leaf random projection matrix, built once per (leaf, shape).
+
+    Hoisted out of the per-call path: inside jit these become baked
+    constants instead of per-call PRNG + normal ops, and repeated host
+    calls reuse the cached array."""
+    return jax.random.normal(jax.random.PRNGKey(leaf_idx), (n_proj, width))
 
 
 def digest(tree, n_proj: int = 4) -> jnp.ndarray:
@@ -27,18 +38,16 @@ def digest(tree, n_proj: int = 4) -> jnp.ndarray:
     acc = jnp.zeros((n_proj,), jnp.float32)
     for i, leaf in enumerate(jax.tree.leaves(tree)):
         f = leaf.astype(jnp.float32).reshape(-1)
-        key = jax.random.PRNGKey(i)
-        proj = jax.random.normal(key, (n_proj, min(f.shape[0], 128)))
-        acc = acc + proj @ f[: min(f.shape[0], 128)]
+        width = min(f.shape[0], 128)
+        acc = acc + _projection(i, width, n_proj) @ f[:width]
     return acc
 
 
 def majority_digest(aggs, extra):
     """Pick the aggregate whose (quantized) digest has the most matches —
-    honest majority nullifies minority poisoners (Chowdhury et al. [13])."""
-    W = jax.tree.leaves(aggs)[0].shape[0]
-    digs = jnp.stack([digest(jax.tree.map(lambda t: t[w], aggs))
-                      for w in range(W)])                      # (W, P)
+    honest majority nullifies minority poisoners (Chowdhury et al. [13]).
+    The per-worker digests run as one vmap over the stacked worker dim."""
+    digs = jax.vmap(digest)(aggs)                              # (W, P)
     q = jnp.round(digs * 1e4) / 1e4
     same = (jnp.abs(q[:, None] - q[None, :]) < 1e-3).all(-1)   # (W, W)
     votes = same.sum(-1)

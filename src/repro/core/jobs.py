@@ -20,6 +20,7 @@ from repro.core.topology import get_topology
 from repro.core.blockchain import get_ledger
 from repro.data.pipeline import SyntheticLM, SyntheticVision
 from repro.models import model_zoo
+from repro.runtime.clock import ClientSystemModel
 from repro.runtime.faults import FaultModel
 
 
@@ -79,10 +80,18 @@ def load_job(path_or_dict) -> Job:
     else:
         raise KeyError(f"unknown dataset {kind!r}")
 
+    # ClientSystemModel is a FaultModel: the sync path only reads the fault
+    # fields, the async virtual clock also reads the system ones.
     rt = raw.get("runtime", {})
-    fault = FaultModel(drop_prob=rt.get("drop_prob", 0.0),
-                       straggler_prob=rt.get("straggler_prob", 0.0),
-                       seed=fl.seed)
+    fault = ClientSystemModel(
+        drop_prob=rt.get("drop_prob", 0.0),
+        straggler_prob=rt.get("straggler_prob", 0.0),
+        straggler_slowdown=rt.get("straggler_slowdown", 4.0),
+        seed=fl.seed,
+        mean_duration=rt.get("mean_duration", 1.0),
+        duration_sigma=rt.get("duration_sigma", 0.25),
+        rate_spread=rt.get("rate_spread", 0.0),
+        availability=rt.get("availability", 1.0))
     return Job(
         name=raw.get("name", "job"),
         fl=fl, arch=arch, model=model,

@@ -310,16 +310,17 @@ def init_state(model, strategy: Strategy, fl: FLConfig, key,
                decentralized: bool = False):
     """Initial FL state (meshless path; sharded init goes via launch/)."""
     params = model.init(key, dtype)
+    cstate = ()
+    if _has_client_state(strategy):
+        # probe the client state off the params we already initialized —
+        # a second model.init here would double the init cost at scale
+        cstate = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (n_clients_local,) + t.shape),
+            strategy.client_state_init(params))
     if decentralized:
         params = jax.tree.map(
             lambda t: jnp.broadcast_to(t, (n_clients_local,) + t.shape),
             params)
-    cstate = strategy.client_state_init(
-        model.init(key, dtype)) if _has_client_state(strategy) else ()
-    if _has_client_state(strategy):
-        cstate = jax.tree.map(
-            lambda t: jnp.broadcast_to(t, (n_clients_local,) + t.shape),
-            cstate)
     return {
         "params": params,
         "server": strategy.server_state_init(params),

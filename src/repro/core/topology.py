@@ -90,7 +90,10 @@ class Decentralized:
                     mixed = mixed + right + left
                     n += 2
             if ctx.model is None and ctx.data is None and t.shape[0] > 1:
-                mixed = mixed + jnp.roll(t, 1, 0) + jnp.roll(t, -1, 0)
+                # roll the f32-cast accumulator, not the raw t: the meshless
+                # ring must feed the same dtype into the accumulator as the
+                # ppermute path (which exchanges the cast ``mixed``)
+                mixed = mixed + jnp.roll(mixed, 1, 0) + jnp.roll(mixed, -1, 0)
                 n += 2
             return (mixed / n).astype(t.dtype)
 

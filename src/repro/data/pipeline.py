@@ -53,24 +53,35 @@ def stage_partitions(x, y, parts):
             "idx": jnp.asarray(idx), "len": jnp.asarray(lens)}
 
 
+def gather_one_client_batch(staged, round_key, client, batch_size: int,
+                            n_steps: int):
+    """Jittable batch gather for a single (possibly traced) client id.
+
+    Positions are drawn uniformly (with replacement) from the client's true
+    partition via ``determinism.batch_key(round_key, client)``, so the batch
+    stream for a given (seed, round) is identical no matter how rounds (or
+    async events) are chunked into launches. The sync driver vmaps this over
+    all clients; the async event scan calls it per arriving client — the two
+    are bitwise-identical lanes because threefry draws are
+    vectorization-invariant. Returns {"x": (n_steps, B, ...), "y": ...}.
+    """
+    key = determinism.batch_key(round_key, client)
+    maxv = jnp.maximum(staged["len"][client], 1)
+    pos = jax.random.randint(key, (n_steps, batch_size), 0, maxv)
+    sel = staged["idx"][client, pos]
+    return {"x": staged["x"][sel], "y": staged["y"][sel]}
+
+
 def gather_client_batches(staged, round_key, batch_size: int, n_steps: int):
     """Jittable per-round batch gather for every client, on device.
 
-    Positions are drawn uniformly (with replacement) from each client's true
-    partition via ``determinism.batch_key(round_key, client)``, so the batch
-    stream for a given (seed, round) is identical no matter how rounds are
-    chunked into launches. Returns {"x": (C, n_steps, B, ...), "y": ...}.
+    One vmap over ``gather_one_client_batch`` (the single source of truth
+    for the position draw). Returns {"x": (C, n_steps, B, ...), "y": ...}.
     """
     n_clients = staged["idx"].shape[0]
-
-    def per_client(c):
-        key = determinism.batch_key(round_key, c)
-        maxv = jnp.maximum(staged["len"][c], 1)
-        pos = jax.random.randint(key, (n_steps, batch_size), 0, maxv)
-        sel = staged["idx"][c, pos]
-        return {"x": staged["x"][sel], "y": staged["y"][sel]}
-
-    return jax.vmap(per_client)(jnp.arange(n_clients))
+    return jax.vmap(
+        lambda c: gather_one_client_batch(staged, round_key, c, batch_size,
+                                          n_steps))(jnp.arange(n_clients))
 
 
 @dataclasses.dataclass

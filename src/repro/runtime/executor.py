@@ -15,6 +15,13 @@ params for the same seed.
 across the grid, the seed default) or "temporal" (one client at a time uses
 the whole mesh); "auto" resolves to spatial.
 
+``fl.mode`` selects the execution mode: "sync" (round-synchronous, above) or
+"async" (event-driven FedAsync/FedBuff over the virtual clock — see
+core/async_rounds.py). The async path shares this chunk loop shape: a
+"round" is ``events_per_round`` server events, ``rounds_per_launch`` rounds
+compile into one event scan, and checkpoint/ledger/eval/logging reuse the
+same chunk-boundary plumbing.
+
 ProcessPhase: 0=init 1=local-learning 2=aggregation (paper §2.3).
 NodeStage:    0=not-ready 1=ready-for-job 2=ready-with-dataset
               3=busy 4=waiting/complete.
@@ -51,10 +58,23 @@ class Executor:
         self.logger = self.logger or PerformanceLogger(run_name=self.job.name)
         fl = self.job.fl
         self.placement = fl.placement if fl.placement != "auto" else "spatial"
-        self._multi = build_multi_round(
-            self.job.model, self.job.strategy, fl,
-            cfg=getattr(self.job.model, "cfg", None),
-            placement=self.placement, fault=self.job.fault)
+        self.mode = fl.mode
+        if self.mode == "async":
+            from repro.core.async_rounds import build_async_multi
+            # async "round" = events_per_round server events: one FedBuff
+            # buffer flush, or (FedAsync) one arrival per client on average.
+            self.events_per_round = (fl.async_buffer if fl.async_buffer > 1
+                                     else fl.n_clients)
+            self._multi = build_async_multi(self.job.model,
+                                            self.job.strategy, fl)
+        elif self.mode == "sync":
+            self._multi = build_multi_round(
+                self.job.model, self.job.strategy, fl,
+                cfg=getattr(self.job.model, "cfg", None),
+                placement=self.placement, fault=self.job.fault)
+        else:
+            raise ValueError(f"unknown mode {self.mode!r} "
+                             "(want 'sync' or 'async')")
         self._programs = {}               # scan length -> jitted program
 
     def _round_program(self, n_rounds: int):
@@ -65,6 +85,37 @@ class Executor:
                 lambda s, staged, root, start, n=n_rounds:
                 self._multi(self.ctx, s, staged, root, start, n))
         return self._programs[n_rounds]
+
+    def _event_program(self, n_events: int):
+        """Jitted async launch scanning ``n_events`` server events."""
+        key = ("async", n_events)
+        if key not in self._programs:
+            self._programs[key] = jax.jit(
+                lambda s, staged, sched, root, start, n=n_events:
+                self._multi(self.ctx, s, staged, sched, root, start, n))
+        return self._programs[key]
+
+    def _build_schedule(self, n_rounds: int):
+        """Precompute + stage the virtual-clock event schedule (async)."""
+        import numpy as _np
+
+        from repro.core.async_rounds import async_init_state
+        from repro.runtime.clock import ClientSystemModel, build_schedule
+
+        fl = self.job.fl
+        csm = self.job.fault
+        if not isinstance(csm, ClientSystemModel):
+            csm = ClientSystemModel(**dataclasses.asdict(csm))
+        self.schedule = build_schedule(
+            csm, fl.n_clients, n_rounds * self.events_per_round,
+            _np.asarray(self.staged["len"], _np.float32),
+            buffer_size=fl.async_buffer,
+            staleness_exponent=fl.staleness_exponent,
+            max_staleness=fl.max_staleness,
+            concurrency=fl.async_concurrency)
+        self.sched_dev = self.schedule.device_arrays()
+        if "hist" not in self.state:
+            self.state = async_init_state(self.state, self.schedule.ring)
 
     # -- Alg. 1 lines 1-15: scaffold ------------------------------------
     def scaffold(self):
@@ -85,6 +136,8 @@ class Executor:
         key = determinism.root_key(fl.seed)
         self.state = init_state(self.job.model, self.job.strategy, fl, key,
                                 n_clients_local=fl.n_clients)
+        if self.mode == "async":
+            self._build_schedule(fl.rounds)
         self.round_idx = 0
         # restart path (fault tolerance): resume from the newest manifest
         if self.ckpt_dir:
@@ -97,6 +150,8 @@ class Executor:
 
     # -- Alg. 1 lines 16-57: chunked round loop ---------------------------
     def run(self, rounds: Optional[int] = None):
+        if self.mode == "async":
+            return self._run_async(rounds)
         fl = self.job.fl
         rounds = rounds or fl.rounds
         root = determinism.root_key(fl.seed)
@@ -116,32 +171,85 @@ class Executor:
             state = jax.block_until_ready(state)
             dt = time.time() - t0
             self.state = state
-            for node in self.nodes:
-                self.kv.set_node_stage(node, 4)
-            # -- host I/O, chunk boundary only ----------------------------
-            last = start + n - 1
-            if self.job.ledger is not None:
-                dig = param_digest(self.state["params"])
-                self.job.ledger.record_global(last, self.state["params"])
-                self.kv.publish(f"global_digest/{last}", dig)
-            eval_row = {}
-            if self.eval_fn is not None:
-                eval_row = {k: float(v) for k, v in
-                            self.eval_fn(self.state["params"]).items()}
             stacked = {k: np.asarray(v) for k, v in metrics.items()}
-            for i in range(n):
-                row = {k: float(v[i]) for k, v in stacked.items()}
-                row["round_s"] = dt / n
-                if i == n - 1:
-                    row.update(eval_row)
-                self.logger.log_round(start + i, **row)
-            self.round_idx += n
-            # save when this chunk crossed a checkpoint_every multiple (the
-            # cadence survives chunk sizes that don't divide it)
-            if self.ckpt_dir and fl.checkpoint_every and \
-                    start // fl.checkpoint_every != \
-                    self.round_idx // fl.checkpoint_every:
-                ckpt_mod.save(self.ckpt_dir, self.round_idx, self.state,
-                              extra={"next_round": self.round_idx},
-                              async_write=False)
+            rows = [dict({k: float(v[i]) for k, v in stacked.items()},
+                         round_s=dt / n) for i in range(n)]
+            self._finish_chunk(start, n, rows)
+        return self.state, self.logger
+
+    def _finish_chunk(self, start: int, n: int, rows):
+        """Chunk-boundary host I/O, shared by the sync and async loops:
+        ledger record, eval (merged into the last round's row), logging,
+        round-index advance, checkpoint-cadence save."""
+        fl = self.job.fl
+        for node in self.nodes:
+            self.kv.set_node_stage(node, 4)
+        last = start + n - 1
+        if self.job.ledger is not None:
+            dig = param_digest(self.state["params"])
+            self.job.ledger.record_global(last, self.state["params"])
+            self.kv.publish(f"global_digest/{last}", dig)
+        if self.eval_fn is not None:
+            rows[-1].update({k: float(v) for k, v in
+                             self.eval_fn(self.state["params"]).items()})
+        for i in range(n):
+            self.logger.log_round(start + i, **rows[i])
+        self.round_idx += n
+        # save when this chunk crossed a checkpoint_every multiple (the
+        # cadence survives chunk sizes that don't divide it)
+        if self.ckpt_dir and fl.checkpoint_every and \
+                start // fl.checkpoint_every != \
+                self.round_idx // fl.checkpoint_every:
+            ckpt_mod.save(self.ckpt_dir, self.round_idx, self.state,
+                          extra={"next_round": self.round_idx},
+                          async_write=False)
+
+    # -- async: chunked event loop ----------------------------------------
+    def _run_async(self, rounds: Optional[int] = None):
+        """Event-driven execution. A "round" is ``events_per_round`` server
+        events; the chunk loop, and all chunk-boundary host I/O, are the
+        sync loop's — only the compiled program differs (an event scan
+        instead of a round scan)."""
+        fl = self.job.fl
+        rounds = rounds or fl.rounds
+        root = determinism.root_key(fl.seed)
+        chunk = max(fl.rounds_per_launch, 1)
+        epr = self.events_per_round
+        if rounds * epr > len(self.schedule):
+            # Horizon grew past the scaffolded schedule. Regenerating is
+            # only safe before any event ran (or for FedAsync, which has no
+            # buffer groups): a FedBuff group left open at the old horizon
+            # gets renormalized coefficients once the longer horizon closes
+            # it, which would silently de-normalize contributions already
+            # folded into the carried accumulator.
+            if self.round_idx > 0 and fl.async_buffer > 1:
+                raise RuntimeError(
+                    f"async run asked for {rounds} rounds mid-flight but "
+                    f"the schedule covers {len(self.schedule) // epr}; "
+                    "scaffold with a larger fl.rounds (or resume from a "
+                    "checkpoint) instead of growing a FedBuff run in place")
+            self._build_schedule(rounds)
+        while self.round_idx < rounds:
+            start = self.round_idx
+            n = min(chunk, rounds - start)
+            n_ev = n * epr
+            self.kv.set_process_phase(1)
+            for node in self.nodes:
+                self.kv.set_node_stage(node, 3)
+            self.kv.set_process_phase(2)
+            t0 = time.time()
+            state, metrics = self._event_program(n_ev)(
+                self.state, self.staged, self.sched_dev, root, start * epr)
+            state = jax.block_until_ready(state)
+            dt = time.time() - t0
+            self.state = state
+            stacked = {k: np.asarray(v).reshape(n, epr)
+                       for k, v in metrics.items()}
+            rows = [{"loss": float(stacked["loss"][i].mean()),
+                     "staleness": float(stacked["staleness"][i].mean()),
+                     "applied": float(stacked["applied"][i].sum()),
+                     "round_s": dt / n,
+                     "events_per_s": n_ev / max(dt, 1e-9)}
+                    for i in range(n)]
+            self._finish_chunk(start, n, rows)
         return self.state, self.logger

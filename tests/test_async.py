@@ -1,0 +1,219 @@
+"""Event-driven async FL subsystem tests (virtual clock + FedAsync/FedBuff).
+
+The async determinism contract mirrors the sync driver's
+(tests/test_driver.py): for one seed the event trajectory is bitwise
+identical no matter how events are chunked into launches, and the virtual
+clock schedule is a pure function of the seed. The anchor is the identity
+test: FedBuff with buffer == cohort, zero staleness discount and equal
+client speeds IS synchronous FedAvg, bit for bit.
+"""
+import os
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.jobs import load_job
+from repro.runtime.clock import ClientSystemModel, build_schedule
+from repro.runtime.executor import Executor
+
+
+def _job(rounds_per_launch: int, rounds: int = 4, seed: int = 7, *,
+         mode: str = "async", async_buffer: int = 3,
+         staleness_exponent: float = 0.5, max_staleness: int = 4,
+         placement: str = "spatial", runtime=None, n_clients: int = 4,
+         **train_extra):
+    raw = {
+        "name": f"async-{mode}-{rounds_per_launch}",
+        "model": {"arch": "flsim-mlp"},
+        "dataset": {"dataset": "synthetic_vision", "n_items": 256,
+                    "distribution": {"partition": "dirichlet",
+                                     "dirichlet_alpha": 0.5}},
+        "strategy": {"strategy": "fedavg",
+                     "train_params": {"n_clients": n_clients,
+                                      "local_epochs": 1,
+                                      "client_lr": 0.1, "rounds": rounds,
+                                      "seed": seed, "mode": mode,
+                                      "placement": placement,
+                                      "async_buffer": async_buffer,
+                                      "staleness_exponent":
+                                          staleness_exponent,
+                                      "max_staleness": max_staleness,
+                                      "rounds_per_launch":
+                                          rounds_per_launch}},
+        "runtime": runtime if runtime is not None else
+                   {"straggler_prob": 0.2, "duration_sigma": 0.25},
+    }
+    raw["strategy"]["train_params"].update(train_extra)
+    return load_job(raw)
+
+
+def _params(state):
+    return jax.tree.map(np.asarray, state["params"])
+
+
+def _assert_bitwise_equal(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+EQUAL_SPEEDS = {"straggler_prob": 0.0, "duration_sigma": 0.0,
+                "rate_spread": 0.0, "availability": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# determinism contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("async_buffer", [3, 0])  # FedBuff(3) and FedAsync
+def test_event_scan_chunked_equals_unchunked(async_buffer):
+    """One fused event scan (rounds_per_launch=10) == per-chunk launches
+    (=1), bitwise, under real heterogeneity (stragglers + jitter + staleness
+    discount); an uneven chunking (3+1) must also agree."""
+    runs = {}
+    for chunk in (1, 10, 3):
+        ex = Executor(_job(chunk, async_buffer=async_buffer)).scaffold()
+        state, logger = ex.run()
+        runs[chunk] = (_params(state), logger.series("loss"))
+    assert runs[1][1] == runs[10][1], "per-round async losses diverged"
+    _assert_bitwise_equal(runs[1][0], runs[10][0])
+    _assert_bitwise_equal(runs[1][0], runs[3][0])
+
+
+def test_fedbuff_identity_with_sync_fedavg():
+    """FedBuff with buffer == cohort, zero staleness discount and equal
+    client speeds reproduces synchronous FedAvg (temporal placement)
+    bit-for-bit: same arrivals in client order per round, same batch keys,
+    same sequential weighted accumulation, same server update."""
+    sync = Executor(_job(5, rounds=5, seed=11, mode="sync",
+                         placement="temporal",
+                         runtime=EQUAL_SPEEDS)).scaffold()
+    s_sync, _ = sync.run()
+    asy = Executor(_job(5, rounds=5, seed=11, async_buffer=4,
+                        staleness_exponent=0.0,
+                        runtime=EQUAL_SPEEDS)).scaffold()
+    s_async, _ = asy.run()
+    _assert_bitwise_equal(_params(s_sync), _params(s_async))
+    # all arrivals fresh: every event has staleness 0 and every round applies
+    assert all(s == 0.0 for s in asy.logger.series("staleness"))
+    assert all(a == 1.0 for a in asy.logger.series("applied"))
+
+
+def test_async_trains():
+    """Under heterogeneity the async run must still learn (loss falls) and
+    report non-trivial staleness."""
+    ex = Executor(_job(10, rounds=6, async_buffer=2)).scaffold()
+    _, logger = ex.run()
+    losses = logger.series("loss")
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    assert max(logger.series("staleness")) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# virtual clock / schedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_deterministic_and_staleness_bounded():
+    csm = ClientSystemModel(seed=3, straggler_prob=0.3, duration_sigma=0.5,
+                            rate_spread=0.5, availability=0.9)
+    w = np.asarray([4.0, 1.0, 2.0, 8.0, 5.0], np.float32)
+    kw = dict(buffer_size=3, staleness_exponent=0.5, max_staleness=2)
+    s1 = build_schedule(csm, 5, 40, w, **kw)
+    s2 = build_schedule(csm, 5, 40, w, **kw)
+    for f in ("client", "task", "staleness", "accept", "apply", "coeff",
+              "read_slot", "write_slot", "vtime"):
+        np.testing.assert_array_equal(getattr(s1, f), getattr(s2, f))
+    # arrivals are virtual-time ordered; accepted ones respect max_staleness
+    assert (np.diff(s1.vtime) >= 0).all()
+    assert (s1.staleness[s1.accept] <= 2).all()
+    assert (s1.coeff[~s1.accept] == 0.0).all()
+    # heterogeneity actually produced stale arrivals
+    assert s1.staleness.max() > 0
+    # FedBuff: one apply per 3 accepted arrivals
+    assert s1.apply.sum() == s1.accept.sum() // 3 == s1.n_versions
+
+
+def test_schedule_prefix_stable():
+    """Extending the horizon must not rewrite history: the first E events of
+    a longer schedule equal the E-event schedule (apply/coeff of a trailing
+    open buffer group are the only allowed difference, and the executor
+    never applies an open group)."""
+    csm = ClientSystemModel(seed=1, straggler_prob=0.2, duration_sigma=0.3)
+    w = np.ones(4, np.float32)
+    kw = dict(buffer_size=3, staleness_exponent=0.5, max_staleness=4)
+    short = build_schedule(csm, 4, 12, w, **kw)
+    long = build_schedule(csm, 4, 24, w, **kw)
+    last_apply = int(np.nonzero(short.apply)[0][-1]) + 1
+    for f in ("client", "task", "staleness", "accept", "read_slot", "vtime"):
+        np.testing.assert_array_equal(getattr(short, f),
+                                      getattr(long, f)[:12])
+    np.testing.assert_array_equal(short.apply[:last_apply],
+                                  long.apply[:last_apply])
+    np.testing.assert_array_equal(short.coeff[:last_apply],
+                                  long.coeff[:last_apply])
+
+
+def test_equal_speed_schedule_is_round_robin():
+    """Equal speeds + buffer == cohort: arrivals land in client order with
+    zero staleness and one apply per cohort — the schedule shape behind the
+    sync-identity test."""
+    csm = ClientSystemModel(seed=0, straggler_prob=0.0, duration_sigma=0.0,
+                            rate_spread=0.0)
+    s = build_schedule(csm, 3, 9, np.ones(3, np.float32), buffer_size=3,
+                       staleness_exponent=0.0, max_staleness=8)
+    np.testing.assert_array_equal(s.client, np.tile(np.arange(3), 3))
+    np.testing.assert_array_equal(s.task, np.repeat(np.arange(3), 3))
+    assert (s.staleness == 0).all() and s.accept.all()
+    np.testing.assert_array_equal(np.nonzero(s.apply)[0], [2, 5, 8])
+    np.testing.assert_allclose(s.coeff, np.full(9, 1 / 3, np.float32))
+
+
+def test_schedule_single_client():
+    """Degenerate cohort: one client completing every task must schedule
+    cleanly (regression: the re-dispatch after the last event used to index
+    past a fixed-size duration matrix)."""
+    csm = ClientSystemModel(seed=0, duration_sigma=0.1)
+    s = build_schedule(csm, 1, 6, np.ones(1, np.float32), buffer_size=0)
+    np.testing.assert_array_equal(s.client, np.zeros(6))
+    np.testing.assert_array_equal(s.task, np.arange(6))
+    assert s.accept.all() and s.apply.all()
+
+
+def test_gather_one_client_matches_vmapped_gather():
+    """The async per-event gather must be bitwise lane `c` of the sync
+    driver's vmapped gather (threefry vectorization invariance)."""
+    from repro.core import determinism
+    from repro.data.pipeline import (SyntheticVision, gather_client_batches,
+                                     gather_one_client_batch,
+                                     stage_partitions)
+    data = SyntheticVision(n_items=128, seed=0)
+    x, y, parts = data.distribute_into_chunks("dirichlet", 4, 0.5)
+    staged = stage_partitions(x, y, parts)
+    rkey = determinism.round_key(determinism.root_key(0), 2)
+    all_batches = gather_client_batches(staged, rkey, 8, 2)
+    for c in range(4):
+        one = gather_one_client_batch(staged, jnp.asarray(rkey), c, 8, 2)
+        for k in ("x", "y"):
+            np.testing.assert_array_equal(np.asarray(all_batches[k][c]),
+                                          np.asarray(one[k]))
+
+
+def test_async_checkpoint_resume(tmp_path):
+    """Async runs reuse the checkpoint plumbing: stopping after a chunk and
+    resuming from the manifest continues the same bitwise trajectory
+    (the schedule is re-derived from the seed, the ring/accumulator carries
+    are restored from the checkpoint)."""
+    def mk():
+        return _job(2, rounds=4, async_buffer=2, checkpoint_every=2)
+
+    ref, _ = Executor(mk()).scaffold().run()
+    ex = Executor(mk(), ckpt_dir=str(tmp_path)).scaffold()
+    ex.run(rounds=2)
+    ex2 = Executor(mk(), ckpt_dir=str(tmp_path)).scaffold()
+    assert ex2.round_idx == 2, "resume must land on the saved boundary"
+    s2, _ = ex2.run()
+    _assert_bitwise_equal(_params(ref), _params(s2))

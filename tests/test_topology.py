@@ -1,0 +1,109 @@
+"""Topology reduction-plan tests (paper Fig. 4 / RQ5).
+
+Covers the identities the aggregation plans promise: hierarchical collapses
+to client-server when there is no pod tier, gossip mixing is doubly
+stochastic (preserves the client mean), and the meshless roll-based gossip
+ring agrees with the real ppermute ring on a forced-device mesh.
+"""
+import os
+import subprocess
+import sys
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import (ClientServer, Decentralized, Hierarchical,
+                                 get_topology)
+from repro.sharding.axes import AxisCtx
+
+
+def _deltas(seed=0, n_clients=6, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (n_clients, 5, 3)).astype(dtype),
+            "b": jax.random.normal(k2, (n_clients, 4)).astype(dtype)}
+
+
+@pytest.mark.parametrize("weights", ["equal", "sized"])
+def test_hierarchical_equals_client_server_meshless(weights):
+    """With no pod tier (meshless / single-pod) the two-tier reduction IS
+    the flat weighted mean — clustered and client-server jobs must agree."""
+    d = _deltas()
+    w = (jnp.ones(6) if weights == "equal"
+         else jnp.asarray([1.0, 5.0, 2.0, 7.0, 3.0, 1.0]))
+    ctx = AxisCtx()
+    flat = ClientServer().aggregate(ctx, d, w)
+    tiered = Hierarchical().aggregate(ctx, d, w)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(tiered)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("gossip_steps", [1, 3])
+def test_gossip_mixing_preserves_client_mean(gossip_steps):
+    """The ring mixing matrix is doubly stochastic: k gossip steps must
+    leave the across-client mean invariant (decentralized FL sanity)."""
+    d = _deltas(seed=3)
+    mixed = Decentralized(gossip_steps=gossip_steps).mix(AxisCtx(), d)
+    for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(mixed)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a).mean(0),
+                                   np.asarray(b).mean(0), rtol=1e-5,
+                                   atol=1e-6)
+        # and it actually mixed something
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_gossip_meshless_preserves_low_precision_mean():
+    """Regression for the meshless ring dtype fix: mixing bf16 state must
+    accumulate in f32 (like the ppermute path), so the client mean survives
+    at f32 accuracy and the output keeps the input dtype."""
+    d = _deltas(seed=5, dtype=jnp.bfloat16)
+    mixed = Decentralized(gossip_steps=2).mix(AxisCtx(), d)
+    for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(mixed)):
+        assert b.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32).mean(0),
+                                   np.asarray(b, np.float32).mean(0),
+                                   rtol=0.05, atol=0.05)
+
+
+def test_gossip_meshless_matches_mesh():
+    """The roll-based meshless ring and the ppermute ring are the same
+    mixing plan: on a 1-axis forced-device mesh they must agree bitwise
+    (subprocess: the device count must be forced before jax initializes)."""
+    code = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4';"
+        "os.environ.setdefault('REPRO_KERNEL_IMPL','jnp');"
+        "import sys; sys.path.insert(0,'src');"
+        "import jax, numpy as np, jax.numpy as jnp;"
+        "from jax.sharding import Mesh, PartitionSpec as P;"
+        "from jax.experimental.shard_map import shard_map;"
+        "from repro.core.topology import Decentralized;"
+        "from repro.sharding.axes import AxisCtx;"
+        "topo=Decentralized(gossip_steps=3);"
+        "x=jax.random.normal(jax.random.PRNGKey(0),(4,8))"
+        ".astype(jnp.bfloat16);"
+        "mesh=Mesh(np.array(jax.devices()[:4]),('data',));"
+        "f=shard_map(lambda t: topo.mix(AxisCtx(data='data'), t), mesh=mesh,"
+        " in_specs=P('data'), out_specs=P('data'));"
+        "on_mesh=np.asarray(jax.jit(f)(x), np.float32);"
+        "meshless=np.asarray(topo.mix(AxisCtx(), x), np.float32);"
+        "np.testing.assert_array_equal(on_mesh, meshless);"
+        "print('GOSSIP-AGREE OK')"
+    )
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "GOSSIP-AGREE OK" in r.stdout
+
+
+def test_get_topology_registry():
+    assert isinstance(get_topology("client_server"), ClientServer)
+    assert isinstance(get_topology("hierarchical"), Hierarchical)
+    assert get_topology("decentralized", 3).gossip_steps == 3
+    with pytest.raises(KeyError):
+        get_topology("full-mesh-9000")
