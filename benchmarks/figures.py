@@ -113,6 +113,70 @@ def tab12_reproducibility(rounds=5, trials=3):
     return out
 
 
+def campaign_curves(results, metric: str = "loss", seed_axis: str = "seed",
+                    out_png: str = None):
+    """Multi-seed mean±band curves from a campaign results table.
+
+    ``results`` is either a list of tidy rows (``CampaignExecutor.results``)
+    or a path to a ``campaign.csv``. Rows group by every sweep coordinate
+    except ``seed_axis``; within each group the per-round mean and std over
+    seeds form one curve + band. Prints one CSV row per group; if
+    matplotlib is importable (it is optional) and ``out_png`` is set, also
+    draws the banded curves.
+    """
+    import collections
+
+    if isinstance(results, (str, bytes)) or hasattr(results, "read_text"):
+        from repro.runtime.campaign import read_results
+        results = read_results(results)
+    if not results:
+        return []
+    # group strictly by sweep coordinates (the campaign schema's leading
+    # columns are always sweep axis names), so metric/eval columns can
+    # never fragment the grouping regardless of chunk size
+    from repro.core.sweeps import KNOWN_AXES
+    group_keys = [k for k in KNOWN_AXES
+                  if k != seed_axis and k in results[0]]
+    groups = collections.defaultdict(lambda: collections.defaultdict(list))
+    for r in results:
+        if metric not in r:
+            continue
+        g = tuple((k, r.get(k)) for k in group_keys)
+        groups[g][int(r["round"])].append(float(r[metric]))
+    out = []
+    for g, per_round in sorted(groups.items()):
+        rounds = sorted(per_round)
+        mean = np.asarray([np.mean(per_round[r]) for r in rounds])
+        std = np.asarray([np.std(per_round[r]) for r in rounds])
+        label = ",".join(f"{k}={v:g}" for k, v in g) or "all"
+        print(f"campaign_{label},{len(rounds)},"
+              f"{metric}_final={mean[-1]:.4f}±{std[-1]:.4f};"
+              f"n_seeds={len(per_round[rounds[0]])}", flush=True)
+        out.append({"group": dict(g), "rounds": rounds,
+                    "mean": mean.tolist(), "std": std.tolist()})
+    if out_png and out:
+        try:
+            import matplotlib
+            matplotlib.use("Agg")
+            import matplotlib.pyplot as plt
+        except ImportError:
+            return out
+        fig, ax = plt.subplots(figsize=(6, 4))
+        for curve in out:
+            m, s = np.asarray(curve["mean"]), np.asarray(curve["std"])
+            label = ",".join(f"{k}={v:g}" for k, v in curve["group"].items())
+            line, = ax.plot(curve["rounds"], m, label=label or "all")
+            ax.fill_between(curve["rounds"], m - s, m + s, alpha=0.2,
+                            color=line.get_color())
+        ax.set_xlabel("round")
+        ax.set_ylabel(metric)
+        ax.legend(fontsize=7)
+        fig.tight_layout()
+        fig.savefig(out_png, dpi=120)
+        plt.close(fig)
+    return out
+
+
 def fig12_scale(rounds=3, sizes=(100, 250, 500, 1000)):
     """Paper Fig. 12 / RQ7: logreg at 100-1000 virtual clients."""
     out = []

@@ -202,6 +202,100 @@ def bench_async(arch: str = "flsim-mlp", n_clients: int = 16,
     return results
 
 
+def bench_sweep(arch: str = "flsim-logreg", n_traj: int = 8,
+                n_clients: int = 8, rounds: int = 16, chunk: int = 1,
+                n_items: int = 512, seed: int = 0,
+                out_path: str = "BENCH_sweep.json"):
+    """Trajectory-rounds/sec for a multi-seed campaign, vmapped vs
+    sequential, on a paper-scale (flsim_small) CPU config.
+
+    The same S-seed sweep runs two ways: S independent Executor runs (the
+    pre-campaign cost of a multi-seed comparison) and one CampaignExecutor
+    whose S trajectories share a single vmapped compiled program. Each
+    executor gets a warm-up chunk first (compile excluded), so the speedup
+    is steady-state throughput: dispatch amortization + batched lane math.
+    By the campaign determinism contract the two produce bitwise-identical
+    per-lane params, so the delta is pure execution efficiency. Writes
+    ``out_path`` and prints one CSV row per mode.
+
+    The default is the paper's scale-experiment model (logreg, Fig. 12):
+    vmapping the trajectory axis pays where per-launch overhead dominates —
+    at paper scale that is every model; a model whose per-lane working set
+    overflows CPU cache (e.g. the 1M-param MLP at S=8) can instead go
+    memory-bound, which is the documented trade-off, not a bug.
+    """
+    import json
+
+    from repro.core.jobs import load_job
+    from repro.runtime.campaign import CampaignExecutor
+    from repro.runtime.executor import Executor
+
+    assert rounds % chunk == 0, \
+        "rounds must be a multiple of chunk (keeps the timed region free " \
+        "of remainder-length compiles)"
+
+    def raw(seed_s=seed, sweep=None):
+        r = {
+            "name": "bench-sweep",
+            "model": {"arch": arch},
+            "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                        "distribution": {"partition": "dirichlet",
+                                         "dirichlet_alpha": 0.5}},
+            "strategy": {"strategy": "fedavg",
+                         "train_params": {"n_clients": n_clients,
+                                          "local_epochs": 1,
+                                          "client_lr": 0.1,
+                                          "rounds": rounds + chunk,
+                                          "seed": seed_s,
+                                          "rounds_per_launch": chunk}},
+        }
+        if sweep:
+            r["sweep"] = sweep
+        return r
+
+    seeds = [seed + s for s in range(n_traj)]
+    results = {"config": {"arch": arch, "n_traj": n_traj,
+                          "n_clients": n_clients, "rounds": rounds,
+                          "chunk": chunk, "n_items": n_items, "seed": seed,
+                          "backend": jax.default_backend()},
+               "runs": {}}
+
+    # sequential: S independent single runs (warm-up chunk each, excluded)
+    execs = [Executor(load_job(raw(seed_s=s))).scaffold() for s in seeds]
+    for ex in execs:
+        ex.run(rounds=chunk)
+    t0 = time.time()
+    for ex in execs:
+        ex.run(rounds=chunk + rounds)
+    dt_seq = time.time() - t0
+
+    # vmapped: one campaign, S trajectories per launch
+    camp = CampaignExecutor(
+        load_job(raw(sweep={"seeds": seeds}))).scaffold()
+    camp.run(rounds=chunk)
+    t0 = time.time()
+    camp.run(rounds=chunk + rounds)
+    dt_vm = time.time() - t0
+
+    traj_rounds = n_traj * rounds        # trajectory-rounds moved per mode
+    for name, dt in (("sequential", dt_seq), ("vmapped", dt_vm)):
+        results["runs"][name] = {
+            "trajectories": n_traj, "rounds": rounds, "wall_s": dt,
+            "traj_rounds_per_s": traj_rounds / dt,
+            "s_per_traj_round": dt / traj_rounds}
+    speedup = dt_seq / dt_vm
+    results["speedup_vmapped_vs_sequential"] = speedup
+    for name in ("sequential", "vmapped"):
+        r = results["runs"][name]
+        print(f"sweep_{name},{r['s_per_traj_round']*1e6:.0f},"
+              f"traj_rounds_per_s={r['traj_rounds_per_s']:.2f};"
+              f"speedup={speedup if name == 'vmapped' else 1.0:.2f}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run_fl(fl: FLConfig, arch: str = "flsim-cnn", n_items: int = 768,
            rounds: int = 8, batch: int = 16, steps: int = 1,
            eval_n: int = 256, arch_cfg=None, run_name: str = "run"):

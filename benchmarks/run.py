@@ -45,6 +45,9 @@ def main() -> None:
         "driver": lambda: flbench.bench_driver(rounds=10 if q else 20),
         "async": lambda: flbench.bench_async(
             events=64 if q else 256, chunk_events=16 if q else 64),
+        # S=8 seeds vmapped vs sequential; --quick keeps S (the speedup is
+        # the claim) and only cuts the timed rounds
+        "sweep": lambda: flbench.bench_sweep(rounds=8 if q else 16),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

@@ -214,6 +214,16 @@ class FLConfig:
     rounds: int = 10
 
 
+# FLConfig scalars a campaign (job `sweep:` section, core/sweeps.py) may
+# thread into the compiled round/event programs as *traced* per-trajectory
+# values. Everything here must be consumed purely arithmetically inside the
+# traced path — no Python control flow on it — so one compiled program
+# serves any value (rounds.bind_hyper rebinds them at trace time; "seed"
+# additionally steers the data plane and the in-program cohort draw).
+SWEEPABLE_SCALARS = ("seed", "client_lr", "server_lr", "server_momentum",
+                     "prox_mu", "moon_mu", "moon_tau", "dp_clip", "dp_noise")
+
+
 @dataclass(frozen=True)
 class MeshConfig:
     multi_pod: bool = False

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import determinism
-from repro.core.rounds import local_train
+from repro.core.rounds import bind_hyper, local_train
 from repro.core.strategy import Strategy, tree_add, tree_scale, tree_zeros_like
 from repro.data.pipeline import gather_one_client_batch
 from repro.sharding.axes import AxisCtx
@@ -77,7 +77,8 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
     fedbuff = max(fl.async_buffer, 1) > 1
 
     def multi_fn(ctx: AxisCtx, state, staged, sched, root, start_event,
-                 n_events: int):
+                 n_events: int, hyper=None):
+        fl_h, strategy_h = bind_hyper(fl, strategy, hyper)
         xs = {k: jax.lax.dynamic_slice_in_dim(v, start_event, n_events)
               for k, v in sched.items()}
 
@@ -90,7 +91,7 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
             cbatch = gather_one_client_batch(staged, rkey, c, batch_size,
                                              steps)
             key = determinism.client_key(rkey, c)
-            delta, _, loss = local_train(model, ctx, strategy, fl, stale,
+            delta, _, loss = local_train(model, ctx, strategy_h, fl_h, stale,
                                          server, (), cbatch, key)
             if fedbuff:
                 contrib = tree_scale(delta, ev["coeff"])
@@ -108,7 +109,7 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
                 params, server, acc, hist = op
                 agg = jax.tree.map(lambda a, p: a.astype(p.dtype), acc,
                                    params)
-                new_p, new_s = strategy.server_update(params, agg, server)
+                new_p, new_s = strategy_h.server_update(params, agg, server)
                 hist = jax.tree.map(
                     lambda h, p: h.at[ev["write_slot"]].set(p), hist, new_p)
                 return new_p, new_s, tree_zeros_like(acc), hist

@@ -5,16 +5,23 @@ strategy, node defaults, node configs. ``load_job`` turns it into the typed
 configs the rest of the system consumes; ``scaffold`` is the Job
 Orchestrator entry (paper component 1): it resolves the model, strategy,
 topology, dataset pipeline and fault model from one file.
+
+Every section ``load_job`` consumes is validated against its known keys —
+a typo like ``cleint_lr`` fails loudly with a near-miss suggestion instead
+of silently running with the default. A ``sweep:`` section expands the job
+into a campaign (``core/sweeps.py`` + ``runtime/campaign.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import pathlib
 from typing import Any, Optional
 
 import yaml
 
 from repro.configs.base import FLConfig, get_config
+from repro.core import sweeps
 from repro.core.strategies import get_strategy
 from repro.core.topology import get_topology
 from repro.core.blockchain import get_ledger
@@ -36,9 +43,68 @@ class Job:
     ledger: Any
     fault: FaultModel
     raw: dict
+    sweep: Optional[sweeps.SweepSpec] = None
 
 
 _FL_KEYS = {f.name for f in dataclasses.fields(FLConfig)}
+_CSM_KEYS = {f.name for f in dataclasses.fields(ClientSystemModel)}
+_DATASET_KEYS = {"dataset", "n_items", "distribution"}
+_MODEL_KEYS = {"arch", "reduced"}
+_STRATEGY_KEYS = {"strategy", "train_params", "aggregator_params"}
+# paper Fig. 2's six sections (clusters / node sections are accepted but
+# not yet consumed) + model and the campaign sweep
+_TOP_KEYS = {"name", "model", "dataset", "consensus", "strategy", "runtime",
+             "sweep", "clusters", "node_defaults", "node_configs"}
+
+
+def _check_keys(section_name: str, section, allowed) -> None:
+    """Fail on unknown keys with a did-you-mean hint (no silent drops)."""
+    if section is not None and not isinstance(section, dict):
+        raise TypeError(f"job {section_name!r} section must be a mapping, "
+                        f"got {type(section).__name__}: {section!r}")
+    for k in section or {}:
+        if k not in allowed:
+            hint = difflib.get_close_matches(k, sorted(allowed), n=1)
+            suffix = (f" — did you mean {hint[0]!r}?" if hint
+                      else f"; known keys: {sorted(allowed)}")
+            raise KeyError(
+                f"unknown key {k!r} in job {section_name!r} section{suffix}")
+
+
+def make_dataset(raw: dict, fl: FLConfig, cfg=None):
+    """Dataset factory, seeded by ``fl.seed`` — campaigns call this per
+    trajectory so a swept seed re-derives the root data."""
+    ds = raw.get("dataset", {}) or {}
+    kind = ds.get("dataset", "synthetic_vision")
+    if kind == "synthetic_vision":
+        kw = {}
+        if cfg is not None and cfg.family == "small":
+            # flsim-logreg is MNIST-shaped; cnn/mlp keep the CIFAR default
+            from repro.models.small import input_shape
+            kw["shape"] = input_shape(cfg)
+        return SyntheticVision(n_items=ds.get("n_items", 1024), seed=fl.seed,
+                               **kw)
+    if kind == "synthetic_lm":
+        vocab = (cfg.padded_vocab if cfg is not None
+                 and cfg.family != "small" else 512)
+        return SyntheticLM(vocab=vocab, seed=fl.seed)
+    raise KeyError(f"unknown dataset {kind!r}")
+
+
+def make_fault(raw: dict, fl: FLConfig) -> ClientSystemModel:
+    """ClientSystemModel is a FaultModel: the sync path only reads the fault
+    fields, the async virtual clock also reads the system ones. Seeded by
+    ``fl.seed`` (campaigns rebuild per trajectory)."""
+    rt = raw.get("runtime", {}) or {}
+    return ClientSystemModel(
+        drop_prob=rt.get("drop_prob", 0.0),
+        straggler_prob=rt.get("straggler_prob", 0.0),
+        straggler_slowdown=rt.get("straggler_slowdown", 4.0),
+        seed=fl.seed,
+        mean_duration=rt.get("mean_duration", 1.0),
+        duration_sigma=rt.get("duration_sigma", 0.25),
+        rate_spread=rt.get("rate_spread", 0.0),
+        availability=rt.get("availability", 1.0))
 
 
 def load_job(path_or_dict) -> Job:
@@ -47,14 +113,27 @@ def load_job(path_or_dict) -> Job:
     else:
         raw = dict(path_or_dict)
 
-    strat = raw.get("strategy", {})
-    ds = raw.get("dataset", {})
-    cons = raw.get("consensus", {})
+    strat = raw.get("strategy", {}) or {}
+    ds = raw.get("dataset", {}) or {}
+    cons = raw.get("consensus", {}) or {}
+    rt = raw.get("runtime", {}) or {}
+    # a typo'd *section* name ("runtim:", "sweeps:") would silently drop
+    # the whole section, the same failure class as a typo'd key inside one
+    _check_keys("top-level", raw, _TOP_KEYS)
+    _check_keys("strategy", strat, _STRATEGY_KEYS)
+    _check_keys("strategy.train_params", strat.get("train_params"), _FL_KEYS)
+    _check_keys("strategy.aggregator_params", strat.get("aggregator_params"),
+                _FL_KEYS)
+    _check_keys("consensus", cons, _FL_KEYS)
+    _check_keys("dataset", ds, _DATASET_KEYS)
+    _check_keys("dataset.distribution", ds.get("distribution"), _FL_KEYS)
+    _check_keys("model", raw.get("model"), _MODEL_KEYS)
+    _check_keys("runtime", rt, _FL_KEYS | _CSM_KEYS)
+
     flkw = {}
     for section in (strat.get("train_params", {}),
                     strat.get("aggregator_params", {}),
-                    cons, ds.get("distribution", {}),
-                    raw.get("runtime", {})):
+                    cons, ds.get("distribution", {}), rt):
         for k, v in (section or {}).items():
             if k in _FL_KEYS:
                 flkw[k] = v
@@ -70,35 +149,14 @@ def load_job(path_or_dict) -> Job:
         cfg = reduced_config(cfg)
     model = model_zoo.build(cfg)
 
-    kind = ds.get("dataset", "synthetic_vision")
-    if kind == "synthetic_vision":
-        dataset = SyntheticVision(n_items=ds.get("n_items", 1024),
-                                  seed=fl.seed)
-    elif kind == "synthetic_lm":
-        dataset = SyntheticLM(vocab=cfg.padded_vocab
-                              if cfg.family != "small" else 512, seed=fl.seed)
-    else:
-        raise KeyError(f"unknown dataset {kind!r}")
-
-    # ClientSystemModel is a FaultModel: the sync path only reads the fault
-    # fields, the async virtual clock also reads the system ones.
-    rt = raw.get("runtime", {})
-    fault = ClientSystemModel(
-        drop_prob=rt.get("drop_prob", 0.0),
-        straggler_prob=rt.get("straggler_prob", 0.0),
-        straggler_slowdown=rt.get("straggler_slowdown", 4.0),
-        seed=fl.seed,
-        mean_duration=rt.get("mean_duration", 1.0),
-        duration_sigma=rt.get("duration_sigma", 0.25),
-        rate_spread=rt.get("rate_spread", 0.0),
-        availability=rt.get("availability", 1.0))
     return Job(
         name=raw.get("name", "job"),
         fl=fl, arch=arch, model=model,
         strategy=get_strategy(fl),
         topology=get_topology(fl.topology, fl.gossip_steps),
-        dataset=dataset,
+        dataset=make_dataset(raw, fl, cfg),
         ledger=get_ledger(fl.blockchain),
-        fault=fault,
+        fault=make_fault(raw, fl),
         raw=raw,
+        sweep=sweeps.parse_sweep(raw.get("sweep")),
     )

@@ -25,7 +25,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FLConfig, ModelConfig
+from repro.configs.base import SWEEPABLE_SCALARS, FLConfig, ModelConfig
 from repro.core import determinism
 from repro.core.consensus import MultiWorkerAggregator
 from repro.core.strategy import (Strategy, client_sgd_step, tree_add,
@@ -34,6 +34,23 @@ from repro.core.topology import Decentralized, get_topology
 from repro.sharding.axes import AxisCtx
 
 PyTree = Any
+
+
+def bind_hyper(fl: FLConfig, strategy: Strategy, hyper):
+    """Rebind swept scalars (possibly traced) onto the (fl, strategy) pair.
+
+    ``hyper`` is a dict mapping SWEEPABLE_SCALARS names to scalars — Python
+    floats or traced 0-d arrays (one vmap lane of a campaign's (S,) sweep
+    axis). With ``hyper`` empty/None this is the identity, so the
+    single-trajectory path is untouched."""
+    if not hyper:
+        return fl, strategy
+    unknown = set(hyper) - set(SWEEPABLE_SCALARS)
+    if unknown:
+        raise KeyError(f"non-sweepable hyper keys {sorted(unknown)}; "
+                       f"sweepable scalars: {SWEEPABLE_SCALARS}")
+    fl_h = dataclasses.replace(fl, **hyper)
+    return fl_h, dataclasses.replace(strategy, fl=fl_h)
 
 
 # ---------------------------------------------------------------------------
@@ -117,8 +134,9 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
           if (fl.n_workers > 1 or fl.byzantine_workers > 0) else None)
     inner = AxisCtx()   # the model runs unsharded inside each client
 
-    def round_fn(ctx: AxisCtx, state, batch, weights, rng):
+    def round_fn(ctx: AxisCtx, state, batch, weights, rng, hyper=None):
         """batch: (C_loc, steps, B_c, ...); weights: (C_loc,)."""
+        fl_h, strategy_h = bind_hyper(fl, strategy, hyper)
         params = state["params"]
         server_state = state["server"]
         C_loc = jax.tree.leaves(batch)[0].shape[0]
@@ -130,7 +148,7 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
         keys = jax.vmap(lambda c: determinism.client_key(rng, c))(client_ids)
 
         def per_client(cbatch, cstate, key, start_params):
-            return local_train(model, inner, strategy, fl, start_params,
+            return local_train(model, inner, strategy_h, fl_h, start_params,
                                server_state, cstate, cbatch, key)
 
         if decentralized:
@@ -148,7 +166,7 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
             if mw is not None:
                 agg = mw.run(agg, rng)
             agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
-            new_params, new_server = strategy.server_update(
+            new_params, new_server = strategy_h.server_update(
                 params, agg, server_state)
             # SCAFFOLD: the server control variate is the cohort mean of the
             # client variates (communicated alongside the deltas, per the
@@ -194,7 +212,8 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
                                 fl.consensus)
           if (fl.n_workers > 1 or fl.byzantine_workers > 0) else None)
 
-    def round_fn(ctx: AxisCtx, state, batch, weights, rng):
+    def round_fn(ctx: AxisCtx, state, batch, weights, rng, hyper=None):
+        fl_h, strategy_h = bind_hyper(fl, strategy, hyper)
         params = state["params"]
         server_state = state["server"]
         gather_fn = sspecs.make_gather_fn(cfg, ctx)
@@ -206,7 +225,7 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
             cbatch = jax.tree.map(lambda t: t[i], batch)
             key = determinism.client_key(rng, i)
             delta, _, loss = local_train(
-                model, ctx, strategy, fl, params, server_state, (),
+                model, ctx, strategy_h, fl_h, params, server_state, (),
                 cbatch, key, gather_fn, grad_sync)
             w = weights[i]
             acc = tree_add(acc, tree_scale(
@@ -217,7 +236,7 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
             cbatch = jax.tree.map(lambda t: t[0], batch)
             key = determinism.client_key(rng, 0)
             agg, _, loss = local_train(
-                model, ctx, strategy, fl, params, server_state, (),
+                model, ctx, strategy_h, fl_h, params, server_state, (),
                 cbatch, key, gather_fn, grad_sync)
         else:
             acc0 = tree_zeros_like(params)
@@ -229,8 +248,8 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
             agg = jax.tree.map(lambda t: jax.lax.pmean(t, ctx.pod), agg)
         if mw is not None:
             agg = mw.run(agg, rng)
-        new_params, new_server = strategy.server_update(params, agg,
-                                                        server_state)
+        new_params, new_server = strategy_h.server_update(params, agg,
+                                                          server_state)
         new_state = {"params": new_params, "server": new_server,
                      "clients": state.get("clients", ())}
         axes = tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a)
@@ -289,15 +308,18 @@ def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
     target = int(fl.cohort or fl.n_clients)
 
     def multi_fn(ctx: AxisCtx, state, staged, root, start_round,
-                 n_rounds: int):
+                 n_rounds: int, hyper=None):
+        # a swept seed must also steer the in-program cohort draw
+        fault_h = (dataclasses.replace(fault, seed=hyper["seed"])
+                   if hyper and "seed" in hyper else fault)
         base_w = staged["len"].astype(jnp.float32)
 
         def body(st, r):
             rkey = determinism.round_key(root, r)
             batch = gather_client_batches(staged, rkey, batch_size, steps)
-            mask = cohort_mask(fault, r, fl.n_clients, target,
+            mask = cohort_mask(fault_h, r, fl.n_clients, target,
                                fl.straggler_overprovision)
-            return single(ctx, st, batch, base_w * mask, rkey)
+            return single(ctx, st, batch, base_w * mask, rkey, hyper)
 
         rounds = start_round + jnp.arange(n_rounds)
         return jax.lax.scan(body, state, rounds)

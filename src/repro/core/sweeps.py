@@ -1,0 +1,134 @@
+"""Sweep grid expansion for campaigns (FLsim's "plethora of experiments"
+claim, rendered as one compiled program).
+
+A job config plus a ``sweep:`` section expands into S trajectories — the
+row-major product of the sweep axes. The axes split into three planes, which
+is what lets all S trajectories share ONE ``jax.vmap``-over-the-scan launch:
+
+- **data plane** (``seed``, ``dirichlet_alpha``): the value changes the root
+  dataset and/or the client partitions, so each trajectory restages; the
+  staged tensors stack to a leading (S,) dim
+  (``data/pipeline.stage_partitions_stacked``).
+- **schedule plane** (``staleness_exponent``): async only — the value
+  reshapes the host-precomputed event schedule (coefficients), which stacks
+  per trajectory like the data plane; the compiled event scan is unchanged.
+- **scalar plane** (``client_lr``, ``prox_mu``, ``server_lr``, ...): the
+  value is threaded into the compiled round/event program as a *traced*
+  per-trajectory scalar (``core/rounds.bind_hyper``), so one program serves
+  every value — no recompilation across the grid.
+
+``seed`` lives in both the data plane (it reseeds the dataset, partitions
+and virtual clock) and the scalar plane (the in-program cohort draw folds it
+in), which is why it also appears in ``configs.base.SWEEPABLE_SCALARS``.
+
+Determinism contract: expansion is pure bookkeeping — trajectory ``s`` of a
+campaign is *bitwise identical* to a single run of the s-th expanded config
+(tests/test_sweeps.py), because threefry draws are vectorization-invariant
+and the scalar plane only swaps Python floats for equal-valued traced f32s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import SWEEPABLE_SCALARS, FLConfig
+from repro.core import determinism
+
+DATA_AXES = ("seed", "dirichlet_alpha")
+SCHEDULE_AXES = ("staleness_exponent",)
+SCALAR_AXES = tuple(k for k in SWEEPABLE_SCALARS if k != "seed")
+KNOWN_AXES = DATA_AXES + SCHEDULE_AXES + SCALAR_AXES
+
+# job-YAML convenience: `sweep: {seeds: [0, 1, 2]}`
+_AXIS_ALIASES = {"seeds": "seed"}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Ordered sweep axes; the grid is their row-major product."""
+    axes: Tuple[Tuple[str, Tuple[Any, ...]], ...]
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.axes)
+
+    @property
+    def size(self) -> int:
+        s = 1
+        for _, vals in self.axes:
+            s *= len(vals)
+        return s
+
+    def coords(self) -> List[Dict[str, Any]]:
+        """One {axis: value} dict per trajectory, row-major (the last axis
+        varies fastest) — the key order of the results table."""
+        if not self.axes:
+            return [{}]
+        return [dict(zip(self.names, combo))
+                for combo in itertools.product(*(v for _, v in self.axes))]
+
+
+def parse_sweep(section) -> Optional[SweepSpec]:
+    """Validate a job's ``sweep:`` section into a SweepSpec (None if absent).
+
+    Unknown axis names fail loudly with a near-miss suggestion — the same
+    no-silent-typos contract ``load_job`` applies to its other sections.
+    """
+    if section is None:
+        return None
+    if not isinstance(section, dict) or not section:
+        raise ValueError("sweep: section must be a non-empty mapping of "
+                         f"axis -> list of values; got {section!r}")
+    axes = []
+    for raw_name, values in section.items():
+        name = _AXIS_ALIASES.get(raw_name, raw_name)
+        if name not in KNOWN_AXES:
+            hint = difflib.get_close_matches(
+                name, KNOWN_AXES + tuple(_AXIS_ALIASES), n=1)
+            suffix = (f" — did you mean {hint[0]!r}?" if hint
+                      else f"; sweepable axes: {sorted(KNOWN_AXES)}")
+            raise KeyError(f"unknown sweep axis {raw_name!r}{suffix}")
+        if any(name == n for n, _ in axes):
+            raise ValueError(f"sweep axis {raw_name!r} duplicates "
+                             f"{name!r} (aliases resolve to one axis)")
+        if not isinstance(values, (list, tuple)) or len(values) == 0:
+            raise ValueError(f"sweep axis {raw_name!r} needs a non-empty "
+                             f"list of values; got {values!r}")
+        if name == "seed":
+            values = [int(v) for v in values]
+        else:
+            values = [float(v) for v in values]
+        axes.append((name, tuple(values)))
+    return SweepSpec(axes=tuple(axes))
+
+
+def expand(fl: FLConfig, spec: SweepSpec) -> List[FLConfig]:
+    """The S per-trajectory configs, in the grid's row-major order."""
+    return [dataclasses.replace(fl, **coord) for coord in spec.coords()]
+
+
+def scalar_plane(fls: List[FLConfig]) -> Dict[str, Any]:
+    """The traced hyper dict: one (S,) array per SWEEPABLE scalar — swept
+    axes vary per lane, unswept ones broadcast the base value.
+
+    Every sweepable scalar is included (not just the swept ones) to mirror
+    ``runtime.executor.Executor``'s single-run hyper exactly: XLA compiles
+    a scalar-multiply chain differently for a compile-time constant than
+    for a runtime value, so bitwise campaign==single requires both sides to
+    consume the *same* scalars as runtime values.
+    """
+    hyper = {"seed": jnp.asarray([fl.seed for fl in fls], jnp.int32)}
+    for name in SCALAR_AXES:
+        hyper[name] = jnp.asarray([getattr(fl, name) for fl in fls],
+                                  jnp.float32)
+    return hyper
+
+
+def root_keys(fls: List[FLConfig]):
+    """(S, 2) stacked per-trajectory root keys (vmap lane s == the single
+    run's ``determinism.root_key(seed_s)``)."""
+    return jnp.stack([determinism.root_key(fl.seed) for fl in fls])

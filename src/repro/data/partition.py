@@ -14,11 +14,19 @@ import numpy as np
 
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
-                        seed: int = 0, min_size: int = 2):
-    """Returns list of index arrays, one per client."""
+                        seed: int = 0, min_size: int = 2,
+                        max_retries: int = 100):
+    """Returns list of index arrays, one per client.
+
+    Draws are resampled until every client holds ``min_size`` items, bounded
+    by ``max_retries`` (each retry forks the RNG forward, so retry r of one
+    call equals retry r of any other call with the same seed). A tiny alpha
+    with many clients concentrates nearly all mass on a few clients, which
+    used to hang forever here — now it raises with the offending settings.
+    """
     rng = np.random.RandomState(seed)
     n_classes = int(labels.max()) + 1
-    while True:
+    for _ in range(max_retries):
         idx_by_client = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             idx_c = np.where(labels == c)[0]
@@ -29,8 +37,12 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
                 idx_by_client[i].extend(part.tolist())
         sizes = [len(ix) for ix in idx_by_client]
         if min(sizes) >= min_size:
-            break
-    return [np.array(sorted(ix)) for ix in idx_by_client]
+            return [np.array(sorted(ix)) for ix in idx_by_client]
+    raise ValueError(
+        f"dirichlet_partition: no draw gave every client >= {min_size} "
+        f"items after {max_retries} retries (alpha={alpha}, "
+        f"n_clients={n_clients}, n_items={len(labels)}); raise alpha, "
+        "lower n_clients/min_size, or add data")
 
 
 def iid_partition(n_items: int, n_clients: int, seed: int = 0):

@@ -27,6 +27,19 @@ from repro.data import partition as part_mod
 # Device-resident staging (the "download once" half of the driver contract)
 # ---------------------------------------------------------------------------
 
+def _pad_idx(parts, lmax: int) -> np.ndarray:
+    """Ragged per-client index lists -> dense (C, lmax) int32 by cyclic
+    repetition. The wrap never biases sampling: gather positions are drawn
+    in [0, true len), so pad columns past a client's length are never read —
+    which also makes the padding width itself trajectory-invariant."""
+    idx = np.zeros((len(parts), lmax), np.int32)
+    for c, p in enumerate(parts):
+        if len(p):
+            reps = int(np.ceil(lmax / len(p)))
+            idx[c] = np.concatenate([p] * reps)[:lmax]
+    return idx
+
+
 def stage_partitions(x, y, parts):
     """One-time device staging of the full root dataset + client partitions.
 
@@ -41,15 +54,40 @@ def stage_partitions(x, y, parts):
     ``len`` doubles as the FedAvg base weight, so zero-item clients get zero
     weight automatically.
     """
-    n_clients = len(parts)
     lmax = max(max((len(p) for p in parts), default=1), 1)
-    idx = np.zeros((n_clients, lmax), np.int32)
-    for c, p in enumerate(parts):
-        if len(p):
-            reps = int(np.ceil(lmax / len(p)))
-            idx[c] = np.concatenate([p] * reps)[:lmax]
     lens = np.asarray([len(p) for p in parts], np.int32)
     return {"x": jnp.asarray(x), "y": jnp.asarray(y),
+            "idx": jnp.asarray(_pad_idx(parts, lmax)),
+            "len": jnp.asarray(lens)}
+
+
+def stage_partitions_stacked(trajectories):
+    """Stage S trajectories' datasets as one stacked device residency.
+
+    ``trajectories`` is a list of (x, y, parts) triples — one per campaign
+    trajectory (different seeds and/or Dirichlet alphas give different root
+    data and/or partitions; identical triples are simply duplicated). All
+    trajectories must share n_items and n_clients (sweeps vary distribution,
+    not problem size). Returns the ``stage_partitions`` dict with a leading
+    sweep dim on every leaf:
+
+      x (S, N, ...)   y (S, N)   idx (S, C, Lmax)   len (S, C)
+
+    Lmax is the max over trajectories; because gather positions are drawn in
+    [0, len), the wider shared pad is unobservable, so lane ``s`` of the
+    stacked gather is bitwise the trajectory's own single staging.
+    """
+    n_clients = {len(parts) for _, _, parts in trajectories}
+    if len(n_clients) != 1:
+        raise ValueError(f"trajectories disagree on n_clients: {n_clients}")
+    lmax = max(max((max((len(p) for p in parts), default=1), 1)
+                   for _, _, parts in trajectories))
+    xs = np.stack([np.asarray(x) for x, _, _ in trajectories])
+    ys = np.stack([np.asarray(y) for _, y, _ in trajectories])
+    idx = np.stack([_pad_idx(parts, lmax) for _, _, parts in trajectories])
+    lens = np.stack([np.asarray([len(p) for p in parts], np.int32)
+                     for _, _, parts in trajectories])
+    return {"x": jnp.asarray(xs), "y": jnp.asarray(ys),
             "idx": jnp.asarray(idx), "len": jnp.asarray(lens)}
 
 

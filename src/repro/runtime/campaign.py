@@ -1,0 +1,277 @@
+"""Campaign executor — S sweep trajectories in ONE compiled program.
+
+The paper's headline is streamlined benchmarking of "a plethora" of FL
+experiments from job configs; a multi-seed, multi-alpha comparison used to
+cost S sequential runs of the Executor. Here the *trajectory* becomes a
+batch axis: ``core/sweeps.py`` expands the job's ``sweep:`` section into S
+per-trajectory configs split into a data plane (staged partitions stacked to
+``(S, C, Lmax)``; async schedules stacked to ``(S, E)``) and a scalar plane
+(traced ``(S,)`` knob arrays threaded through ``rounds.bind_hyper``), and
+``CampaignExecutor`` wraps the *same* sync round scan / async event scan the
+single-run Executor compiles in an outer ``jax.vmap``. One launch advances
+all S trajectories; the host chunk loop, checkpoint/ledger/eval boundary
+I/O, and the bitwise chunking contract are inherited from ``Executor``.
+
+Determinism contract (tests/test_sweeps.py): lane ``s`` of a campaign is
+**bitwise identical** to an independent single run of the s-th expanded
+config — threefry draws are vectorization-invariant (the same argument
+``gather_client_batches`` relies on), the stacked staging pads are
+unobservable, and the scalar plane only swaps Python floats for
+equal-valued traced f32s. Chunked == unchunked also holds under the sweep
+axis, so campaigns checkpoint/resume like single runs (the stacked state is
+one pytree).
+
+Results land in a tidy table keyed by sweep coordinates (one row per
+trajectory per round) — ``campaign.csv`` always, ``campaign.parquet`` when
+pandas+pyarrow are importable; ``benchmarks/figures.campaign_curves`` draws
+multi-seed mean±band curves from it.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import pathlib
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sweeps
+from repro.core.blockchain import param_digest
+from repro.core.jobs import make_dataset, make_fault
+from repro.core.rounds import init_state
+from repro.data.pipeline import stage_partitions_stacked
+from repro.runtime.executor import Executor
+
+_INT_COLS = ("seed", "traj", "round")
+
+
+def read_results(csv_path) -> list:
+    """Read a campaign.csv back into tidy rows (numbers, not strings);
+    blank cells (eval columns off the chunk tails) are dropped. The single
+    parser for the campaign table — resume and figures both use it."""
+    with open(csv_path, newline="") as f:
+        return [{k: (int(float(v)) if k in _INT_COLS else float(v))
+                 for k, v in row.items() if v != ""}
+                for row in csv.DictReader(f)]
+
+
+@dataclasses.dataclass
+class CampaignExecutor(Executor):
+    """Executor over the sweep axis: same compiled programs, outer vmap.
+
+    ``job`` must carry a ``sweep:`` section (``job.sweep``). ``eval_fn``
+    keeps the single-run signature ``params -> dict`` and is applied per
+    trajectory lane. ``out_dir`` (if set) receives the results table at the
+    end of ``run()``.
+    """
+    out_dir: Optional[str] = None
+
+    def __post_init__(self):
+        if self.job.sweep is None:
+            raise ValueError("CampaignExecutor needs a job with a sweep: "
+                             "section (see core/sweeps.py for the axes)")
+        self.spec = self.job.sweep
+        self.coords = self.spec.coords()
+        self.fls = sweeps.expand(self.job.fl, self.spec)
+        self.S = len(self.fls)
+        self.results = []              # tidy rows: coords + traj/round/metrics
+        self._tail_rows = []           # last-round row per trajectory
+        super().__post_init__()
+
+    # -- scaffold hooks: stacked staging + vmapped init --------------------
+    def _stage_data(self):
+        """Data plane: restage per distinct (seed, partition, alpha);
+        scalar-only sweeps share one triple (stacking still duplicates on
+        device, which is what keeps every lane's gather identical to a
+        single run). Also builds the scalar plane + per-trajectory roots.
+        ``self.data`` is the list of per-trajectory (x, y, parts) host
+        views (eval_fn consumers index it by lane)."""
+        cfg = getattr(self.job.model, "cfg", None)
+        cache, trajs = {}, []
+        for fl_s in self.fls:
+            k = (fl_s.seed, fl_s.partition, fl_s.dirichlet_alpha)
+            if k not in cache:
+                ds = make_dataset(self.job.raw, fl_s, cfg)
+                cache[k] = ds.distribute_into_chunks(
+                    fl_s.partition, fl_s.n_clients, fl_s.dirichlet_alpha)
+            trajs.append(cache[k])
+        self.trajectories = trajs
+        self.data = trajs
+        self.staged = stage_partitions_stacked(trajs)
+        self.roots = sweeps.root_keys(self.fls)
+        self.hyper = sweeps.scalar_plane(self.fls)
+
+    def _init_state(self):
+        fl = self.job.fl
+        self.state = jax.vmap(
+            lambda key: init_state(self.job.model, self.job.strategy, fl,
+                                   key, n_clients_local=fl.n_clients))(
+            self.roots)
+
+    def _post_restore(self):
+        """Resume path: re-adopt the pre-restart rows (the table is
+        rewritten at every chunk boundary, so a completed chunk is never
+        lost) — without this a resumed campaign would silently write a
+        table missing every pre-resume round."""
+        if self.round_idx > 0 and self.out_dir:
+            prior = pathlib.Path(self.out_dir) / "campaign.csv"
+            if prior.exists():
+                self.results = [r for r in read_results(prior)
+                                if r["round"] < self.round_idx]
+
+    def _build_schedule(self, n_rounds: int):
+        """Per-trajectory virtual-clock schedules (seed and
+        staleness_exponent are sweepable), stacked to (S, E) on device."""
+        from repro.core.async_rounds import async_init_state
+        from repro.runtime.clock import build_schedule
+
+        fl = self.job.fl
+        lens = np.asarray(self.staged["len"], np.float32)   # (S, C)
+        self.schedules = [
+            build_schedule(
+                make_fault(self.job.raw, fl_s), fl.n_clients,
+                n_rounds * self.events_per_round, lens[s],
+                buffer_size=fl.async_buffer,
+                staleness_exponent=fl_s.staleness_exponent,
+                max_staleness=fl.max_staleness,
+                concurrency=fl.async_concurrency)
+            for s, fl_s in enumerate(self.fls)]
+        self.schedule = self.schedules[0]       # horizon checks read len()
+        devs = [s.device_arrays() for s in self.schedules]
+        self.sched_dev = {k: jnp.stack([d[k] for d in devs]) for k in devs[0]}
+        if "hist" not in self.state:
+            ring = self.schedules[0].ring
+            self.state = jax.vmap(
+                lambda st: async_init_state(st, ring))(self.state)
+
+    # -- compiled programs: the Executor's, under an outer vmap ------------
+    def _round_program(self, n_rounds: int):
+        if n_rounds not in self._programs:
+            def launch(s, staged, roots, hyper, start, n=n_rounds):
+                return jax.vmap(
+                    lambda st, sg, rt, hp:
+                    self._multi(self.ctx, st, sg, rt, start, n, hp))(
+                    s, staged, roots, hyper)
+            self._programs[n_rounds] = jax.jit(launch)
+        return self._programs[n_rounds]
+
+    def _event_program(self, n_events: int):
+        key = ("async", n_events)
+        if key not in self._programs:
+            def launch(s, staged, sched, roots, hyper, start, n=n_events):
+                return jax.vmap(
+                    lambda st, sg, sd, rt, hp:
+                    self._multi(self.ctx, st, sg, sd, rt, start, n, hp))(
+                    s, staged, sched, roots, hyper)
+            self._programs[key] = jax.jit(launch)
+        return self._programs[key]
+
+    # -- chunk launches (the inherited _chunk_loop drives these) ----------
+    def _launch_sync(self, start: int, n: int):
+        t0 = time.time()
+        state, metrics = self._round_program(n)(
+            self.state, self.staged, self.roots, self.hyper, start)
+        self.state = jax.block_until_ready(state)
+        dt = time.time() - t0
+        stacked = {k: np.asarray(v) for k, v in metrics.items()}  # (S, n)
+        return self._table_rows(stacked, start, n, dt)
+
+    def _launch_async(self, start: int, n: int):
+        epr = self.events_per_round
+        n_ev = n * epr
+        t0 = time.time()
+        state, metrics = self._event_program(n_ev)(
+            self.state, self.staged, self.sched_dev, self.roots, self.hyper,
+            start * epr)
+        self.state = jax.block_until_ready(state)
+        dt = time.time() - t0
+        ev = {k: np.asarray(v).reshape(self.S, n, epr)
+              for k, v in metrics.items()}
+        stacked = {"loss": ev["loss"].mean(-1),
+                   "staleness": ev["staleness"].mean(-1),
+                   "applied": ev["applied"].sum(-1)}
+        return self._table_rows(stacked, start, n, dt)
+
+    def _table_rows(self, stacked, start: int, n: int, dt: float):
+        """Append per-(trajectory, round) rows to the tidy results table;
+        return per-round rows (trajectory means) for the inherited logger."""
+        self._tail_rows = []
+        for s in range(self.S):
+            for i in range(n):
+                row = {**self.coords[s], "traj": s, "round": start + i,
+                       **{k: float(v[s, i]) for k, v in stacked.items()},
+                       "round_s": dt / n}
+                self.results.append(row)
+                if i == n - 1:
+                    self._tail_rows.append(row)
+        return [dict({k: float(v[:, i].mean()) for k, v in stacked.items()},
+                     round_s=dt / n) for i in range(n)]
+
+    def _ledger_record(self, last: int):
+        """One ledger block per trajectory lane: the digest of lane ``s``
+        equals the digest of the s-th single run (bitwise contract), so
+        per-run provenance stays auditable — a digest of the stacked pytree
+        would certify parameters no run ever produced."""
+        for s in range(self.S):
+            params_s = jax.tree.map(lambda t: t[s], self.state["params"])
+            self.job.ledger.record_global(last, params_s)
+            self.kv.publish(f"global_digest/{last}/traj{s}",
+                            param_digest(params_s))
+
+    def _merge_eval(self, rows):
+        """Per-lane eval at the chunk boundary: merged into each
+        trajectory's tail row of the results table, means into the logger."""
+        if self.eval_fn is None:
+            return
+        agg = {}
+        for s, row in enumerate(self._tail_rows):
+            params_s = jax.tree.map(lambda t: t[s], self.state["params"])
+            ev = {k: float(v) for k, v in self.eval_fn(params_s).items()}
+            row.update(ev)
+            for k, v in ev.items():
+                agg.setdefault(k, []).append(v)
+        rows[-1].update({k: float(np.mean(v)) for k, v in agg.items()})
+
+    # -- results table -----------------------------------------------------
+    def _finish_chunk(self, start: int, n: int, rows):
+        super()._finish_chunk(start, n, rows)
+        # rewrite the table at every chunk boundary (it is small): a crash
+        # loses at most the open chunk, and resume re-adopts what is there
+        if self.out_dir:
+            self.write_results()
+
+    def run(self, rounds: Optional[int] = None):
+        state, logger = super().run(rounds)
+        if self.out_dir:
+            self.write_results()
+        return state, logger
+
+    def trajectory_params(self, s: int):
+        """Lane ``s``'s params (bitwise the s-th single run's)."""
+        return jax.tree.map(lambda t: np.asarray(t[s]),
+                            self.state["params"])
+
+    def write_results(self, out_dir=None):
+        """Write the tidy results table: ``campaign.csv`` (always) and
+        ``campaign.parquet`` (when pandas+pyarrow are importable). Schema:
+        one row per (trajectory, round) — sweep coordinate columns in axis
+        order, then ``traj``, ``round``, metric columns."""
+        out = pathlib.Path(out_dir or self.out_dir or ".")
+        out.mkdir(parents=True, exist_ok=True)
+        lead = [*self.spec.names, "traj", "round"]
+        keys = lead + sorted({k for r in self.results for k in r} - set(lead))
+        csv_path = out / "campaign.csv"
+        with open(csv_path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(self.results)
+        try:
+            import pandas as pd
+            pd.DataFrame(self.results, columns=keys).to_parquet(
+                out / "campaign.parquet")
+        except Exception:
+            pass                       # CSV is the portable artifact
+        return csv_path

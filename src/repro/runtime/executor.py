@@ -33,9 +33,11 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_mod
+from repro.configs.base import SWEEPABLE_SCALARS
 from repro.core import determinism
 from repro.core.blockchain import param_digest
 from repro.core.kvstore import KVStore
@@ -76,14 +78,24 @@ class Executor:
             raise ValueError(f"unknown mode {self.mode!r} "
                              "(want 'sync' or 'async')")
         self._programs = {}               # scan length -> jitted program
+        # Sweepable scalars are threaded into the compiled programs as
+        # *runtime* values even for a single run: XLA compiles a scalar-
+        # multiply chain differently for a compile-time constant than for a
+        # runtime value, so this is what makes a campaign lane (where the
+        # scalars are vmapped (S,) arrays) bitwise-identical to this
+        # single-run path (threefry + elementwise math are vmap-invariant).
+        fl = self.job.fl
+        self.hyper = {"seed": jnp.int32(fl.seed)}
+        self.hyper.update({k: jnp.float32(getattr(fl, k))
+                           for k in SWEEPABLE_SCALARS if k != "seed"})
 
     def _round_program(self, n_rounds: int):
         """Jitted n_rounds-launch; at most two lengths ever compile (the
         chunk size and one remainder)."""
         if n_rounds not in self._programs:
             self._programs[n_rounds] = jax.jit(
-                lambda s, staged, root, start, n=n_rounds:
-                self._multi(self.ctx, s, staged, root, start, n))
+                lambda s, staged, root, hyper, start, n=n_rounds:
+                self._multi(self.ctx, s, staged, root, start, n, hyper))
         return self._programs[n_rounds]
 
     def _event_program(self, n_events: int):
@@ -91,8 +103,9 @@ class Executor:
         key = ("async", n_events)
         if key not in self._programs:
             self._programs[key] = jax.jit(
-                lambda s, staged, sched, root, start, n=n_events:
-                self._multi(self.ctx, s, staged, sched, root, start, n))
+                lambda s, staged, sched, root, hyper, start, n=n_events:
+                self._multi(self.ctx, s, staged, sched, root, start, n,
+                            hyper))
         return self._programs[key]
 
     def _build_schedule(self, n_rounds: int):
@@ -119,66 +132,131 @@ class Executor:
 
     # -- Alg. 1 lines 1-15: scaffold ------------------------------------
     def scaffold(self):
+        """One scaffold sequence for single runs and campaigns; the
+        campaign overrides only the staging/init/restore hooks."""
         fl = self.job.fl
         self.kv.set_process_phase(0)
-        nodes = [f"client_{i}" for i in range(fl.n_clients)]
-        for n in nodes:                      # "DownloadJobConfig <- True"
+        self.nodes = [f"client_{i}" for i in range(fl.n_clients)]
+        for n in self.nodes:                 # "DownloadJobConfig <- True"
             self.kv.set_node_stage(n, 1)
-        x, y, parts = self.job.dataset.distribute_into_chunks(
-            fl.partition, fl.n_clients, fl.dirichlet_alpha)
-        self.data = (x, y, parts)   # host view, kept for eval_fn consumers
-        # "DownloadDataset": the one-time device staging of the full client
-        # partition — the round loop never touches host data after this.
-        self.staged = stage_partitions(x, y, parts)
-        for n in nodes:
+        self._stage_data()
+        for n in self.nodes:
             self.kv.set_node_stage(n, 2)
-        self.nodes = nodes
-        key = determinism.root_key(fl.seed)
-        self.state = init_state(self.job.model, self.job.strategy, fl, key,
-                                n_clients_local=fl.n_clients)
+        self._init_state()
         if self.mode == "async":
             self._build_schedule(fl.rounds)
         self.round_idx = 0
-        # restart path (fault tolerance): resume from the newest manifest
+        self._maybe_restore()
+        self._post_restore()
+        return self
+
+    def _stage_data(self):
+        """"DownloadDataset": the one-time device staging of the full client
+        partition — the round loop never touches host data after this."""
+        fl = self.job.fl
+        x, y, parts = self.job.dataset.distribute_into_chunks(
+            fl.partition, fl.n_clients, fl.dirichlet_alpha)
+        self.data = (x, y, parts)   # host view, kept for eval_fn consumers
+        self.staged = stage_partitions(x, y, parts)
+
+    def _init_state(self):
+        fl = self.job.fl
+        # built once: the chunk loop passes it to every launch
+        self.root = determinism.root_key(fl.seed)
+        self.state = init_state(self.job.model, self.job.strategy, fl,
+                                self.root, n_clients_local=fl.n_clients)
+
+    def _post_restore(self):
+        """Hook after a checkpoint restore (campaigns re-adopt their
+        results table here)."""
+
+    def _maybe_restore(self):
+        """Restart path (fault tolerance): resume from the newest manifest."""
         if self.ckpt_dir:
             last = ckpt_mod.latest_round(self.ckpt_dir)
             if last is not None:
                 self.state, extra = ckpt_mod.restore(
                     self.ckpt_dir, last, self.state)
                 self.round_idx = extra["next_round"]
-        return self
 
     # -- Alg. 1 lines 16-57: chunked round loop ---------------------------
     def run(self, rounds: Optional[int] = None):
+        rounds = rounds or self.job.fl.rounds
         if self.mode == "async":
-            return self._run_async(rounds)
-        fl = self.job.fl
-        rounds = rounds or fl.rounds
-        root = determinism.root_key(fl.seed)
-        chunk = max(fl.rounds_per_launch, 1)
+            self._check_async_horizon(rounds)
+            return self._chunk_loop(rounds, self._launch_async)
+        return self._chunk_loop(rounds, self._launch_sync)
+
+    def _chunk_loop(self, rounds: int, launch):
+        """The shared chunked round loop (sync, async, and campaign
+        execution all use it): per chunk, phase bookkeeping, one compiled
+        launch (``launch(start, n) -> rows``, one metrics row per round),
+        then chunk-boundary host I/O (``_finish_chunk``)."""
+        chunk = max(self.job.fl.rounds_per_launch, 1)
         while self.round_idx < rounds:
             start = self.round_idx
             n = min(chunk, rounds - start)
             # phase 1+2 (cohort selection, local learning, aggregation) all
-            # happen inside the compiled multi-round program
+            # happen inside the compiled program
             self.kv.set_process_phase(1)
             for node in self.nodes:
                 self.kv.set_node_stage(node, 3)
             self.kv.set_process_phase(2)
-            t0 = time.time()
-            state, metrics = self._round_program(n)(
-                self.state, self.staged, root, start)
-            state = jax.block_until_ready(state)
-            dt = time.time() - t0
-            self.state = state
-            stacked = {k: np.asarray(v) for k, v in metrics.items()}
-            rows = [dict({k: float(v[i]) for k, v in stacked.items()},
-                         round_s=dt / n) for i in range(n)]
+            rows = launch(start, n)
             self._finish_chunk(start, n, rows)
         return self.state, self.logger
 
+    def _launch_sync(self, start: int, n: int):
+        t0 = time.time()
+        state, metrics = self._round_program(n)(
+            self.state, self.staged, self.root, self.hyper, start)
+        self.state = jax.block_until_ready(state)
+        dt = time.time() - t0
+        stacked = {k: np.asarray(v) for k, v in metrics.items()}
+        return [dict({k: float(v[i]) for k, v in stacked.items()},
+                     round_s=dt / n) for i in range(n)]
+
+    def _launch_async(self, start: int, n: int):
+        """An async "round" is ``events_per_round`` server events; only the
+        compiled program differs from the sync launch (an event scan
+        instead of a round scan)."""
+        epr = self.events_per_round
+        n_ev = n * epr
+        t0 = time.time()
+        state, metrics = self._event_program(n_ev)(
+            self.state, self.staged, self.sched_dev, self.root, self.hyper,
+            start * epr)
+        self.state = jax.block_until_ready(state)
+        dt = time.time() - t0
+        stacked = {k: np.asarray(v).reshape(n, epr)
+                   for k, v in metrics.items()}
+        return [{"loss": float(stacked["loss"][i].mean()),
+                 "staleness": float(stacked["staleness"][i].mean()),
+                 "applied": float(stacked["applied"][i].sum()),
+                 "round_s": dt / n,
+                 "events_per_s": n_ev / max(dt, 1e-9)}
+                for i in range(n)]
+
+    def _check_async_horizon(self, rounds: int):
+        """Horizon grew past the scaffolded schedule? Regenerating is only
+        safe before any event ran (or for FedAsync, which has no buffer
+        groups): a FedBuff group left open at the old horizon gets
+        renormalized coefficients once the longer horizon closes it, which
+        would silently de-normalize contributions already folded into the
+        carried accumulator."""
+        fl = self.job.fl
+        epr = self.events_per_round
+        if rounds * epr > len(self.schedule):
+            if self.round_idx > 0 and fl.async_buffer > 1:
+                raise RuntimeError(
+                    f"async run asked for {rounds} rounds mid-flight but "
+                    f"the schedule covers {len(self.schedule) // epr}; "
+                    "scaffold with a larger fl.rounds (or resume from a "
+                    "checkpoint) instead of growing a FedBuff run in place")
+            self._build_schedule(rounds)
+
     def _finish_chunk(self, start: int, n: int, rows):
-        """Chunk-boundary host I/O, shared by the sync and async loops:
+        """Chunk-boundary host I/O, shared by the sync/async/campaign loops:
         ledger record, eval (merged into the last round's row), logging,
         round-index advance, checkpoint-cadence save."""
         fl = self.job.fl
@@ -186,12 +264,8 @@ class Executor:
             self.kv.set_node_stage(node, 4)
         last = start + n - 1
         if self.job.ledger is not None:
-            dig = param_digest(self.state["params"])
-            self.job.ledger.record_global(last, self.state["params"])
-            self.kv.publish(f"global_digest/{last}", dig)
-        if self.eval_fn is not None:
-            rows[-1].update({k: float(v) for k, v in
-                             self.eval_fn(self.state["params"]).items()})
+            self._ledger_record(last)
+        self._merge_eval(rows)
         for i in range(n):
             self.logger.log_round(start + i, **rows[i])
         self.round_idx += n
@@ -204,52 +278,15 @@ class Executor:
                           extra={"next_round": self.round_idx},
                           async_write=False)
 
-    # -- async: chunked event loop ----------------------------------------
-    def _run_async(self, rounds: Optional[int] = None):
-        """Event-driven execution. A "round" is ``events_per_round`` server
-        events; the chunk loop, and all chunk-boundary host I/O, are the
-        sync loop's — only the compiled program differs (an event scan
-        instead of a round scan)."""
-        fl = self.job.fl
-        rounds = rounds or fl.rounds
-        root = determinism.root_key(fl.seed)
-        chunk = max(fl.rounds_per_launch, 1)
-        epr = self.events_per_round
-        if rounds * epr > len(self.schedule):
-            # Horizon grew past the scaffolded schedule. Regenerating is
-            # only safe before any event ran (or for FedAsync, which has no
-            # buffer groups): a FedBuff group left open at the old horizon
-            # gets renormalized coefficients once the longer horizon closes
-            # it, which would silently de-normalize contributions already
-            # folded into the carried accumulator.
-            if self.round_idx > 0 and fl.async_buffer > 1:
-                raise RuntimeError(
-                    f"async run asked for {rounds} rounds mid-flight but "
-                    f"the schedule covers {len(self.schedule) // epr}; "
-                    "scaffold with a larger fl.rounds (or resume from a "
-                    "checkpoint) instead of growing a FedBuff run in place")
-            self._build_schedule(rounds)
-        while self.round_idx < rounds:
-            start = self.round_idx
-            n = min(chunk, rounds - start)
-            n_ev = n * epr
-            self.kv.set_process_phase(1)
-            for node in self.nodes:
-                self.kv.set_node_stage(node, 3)
-            self.kv.set_process_phase(2)
-            t0 = time.time()
-            state, metrics = self._event_program(n_ev)(
-                self.state, self.staged, self.sched_dev, root, start * epr)
-            state = jax.block_until_ready(state)
-            dt = time.time() - t0
-            self.state = state
-            stacked = {k: np.asarray(v).reshape(n, epr)
-                       for k, v in metrics.items()}
-            rows = [{"loss": float(stacked["loss"][i].mean()),
-                     "staleness": float(stacked["staleness"][i].mean()),
-                     "applied": float(stacked["applied"][i].sum()),
-                     "round_s": dt / n,
-                     "events_per_s": n_ev / max(dt, 1e-9)}
-                    for i in range(n)]
-            self._finish_chunk(start, n, rows)
-        return self.state, self.logger
+    def _ledger_record(self, last: int):
+        """Ledger hook at the chunk boundary (campaigns override: one block
+        per trajectory lane, so per-run provenance stays auditable)."""
+        dig = param_digest(self.state["params"])
+        self.job.ledger.record_global(last, self.state["params"])
+        self.kv.publish(f"global_digest/{last}", dig)
+
+    def _merge_eval(self, rows):
+        """Eval hook at the chunk boundary (campaigns override: per-lane)."""
+        if self.eval_fn is not None:
+            rows[-1].update({k: float(v) for k, v in
+                             self.eval_fn(self.state["params"]).items()})
