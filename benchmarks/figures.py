@@ -124,19 +124,51 @@ def campaign_curves(results, metric: str = "loss", seed_axis: str = "seed",
     matplotlib is importable (it is optional) and ``out_png`` is set, also
     draws the banded curves.
     """
-    import collections
-
-    if isinstance(results, (str, bytes)) or hasattr(results, "read_text"):
-        from repro.runtime.campaign import read_results
-        results = read_results(results)
-    if not results:
-        return []
     # group strictly by sweep coordinates (the campaign schema's leading
     # columns are always sweep axis names), so metric/eval columns can
     # never fragment the grouping regardless of chunk size
     from repro.core.sweeps import KNOWN_AXES
+    results = _load_rows(results)
+    if not results:
+        return []
     group_keys = [k for k in KNOWN_AXES
                   if k != seed_axis and k in results[0]]
+    return _banded_curves(results, group_keys, metric, out_png,
+                          prefix="campaign")
+
+
+def strategy_comparison(results, metric: str = "loss", out_png: str = None):
+    """Cross-strategy mean±band curves from a merged heterogeneous-campaign
+    table (``PlanExecutor`` rows or its ``campaign.csv``).
+
+    One curve per strategy: within each strategy the per-round mean and std
+    pool every other axis (seeds, topologies, lrs ... — the planner's
+    "compare algorithms under one job config" reading of the paper's
+    cross-framework figures). Prints one CSV row per strategy; draws the
+    banded curves when matplotlib is importable and ``out_png`` is set.
+    """
+    results = _load_rows(results)
+    if not results:
+        return []
+    return _banded_curves(results, ["strategy"], metric, out_png,
+                          prefix="strategy")
+
+
+def _load_rows(results):
+    if isinstance(results, (str, bytes)) or hasattr(results, "read_text"):
+        from repro.runtime.campaign import read_results
+        return read_results(results)
+    return results
+
+
+def _fmt_coord(k, v) -> str:
+    return f"{k}={v:g}" if isinstance(v, (int, float)) else f"{k}={v}"
+
+
+def _banded_curves(results, group_keys, metric, out_png, prefix):
+    """Shared tidy-rows -> mean±band grouping behind the figure entries."""
+    import collections
+
     groups = collections.defaultdict(lambda: collections.defaultdict(list))
     for r in results:
         if metric not in r:
@@ -144,14 +176,14 @@ def campaign_curves(results, metric: str = "loss", seed_axis: str = "seed",
         g = tuple((k, r.get(k)) for k in group_keys)
         groups[g][int(r["round"])].append(float(r[metric]))
     out = []
-    for g, per_round in sorted(groups.items()):
+    for g, per_round in sorted(groups.items(), key=str):
         rounds = sorted(per_round)
         mean = np.asarray([np.mean(per_round[r]) for r in rounds])
         std = np.asarray([np.std(per_round[r]) for r in rounds])
-        label = ",".join(f"{k}={v:g}" for k, v in g) or "all"
-        print(f"campaign_{label},{len(rounds)},"
+        label = ",".join(_fmt_coord(k, v) for k, v in g) or "all"
+        print(f"{prefix}_{label},{len(rounds)},"
               f"{metric}_final={mean[-1]:.4f}±{std[-1]:.4f};"
-              f"n_seeds={len(per_round[rounds[0]])}", flush=True)
+              f"n_runs={len(per_round[rounds[0]])}", flush=True)
         out.append({"group": dict(g), "rounds": rounds,
                     "mean": mean.tolist(), "std": std.tolist()})
     if out_png and out:
@@ -164,7 +196,8 @@ def campaign_curves(results, metric: str = "loss", seed_axis: str = "seed",
         fig, ax = plt.subplots(figsize=(6, 4))
         for curve in out:
             m, s = np.asarray(curve["mean"]), np.asarray(curve["std"])
-            label = ",".join(f"{k}={v:g}" for k, v in curve["group"].items())
+            label = ",".join(_fmt_coord(k, v)
+                             for k, v in curve["group"].items())
             line, = ax.plot(curve["rounds"], m, label=label or "all")
             ax.fill_between(curve["rounds"], m - s, m + s, alpha=0.2,
                             color=line.get_color())

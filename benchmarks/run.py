@@ -48,6 +48,9 @@ def main() -> None:
         # S=8 seeds vmapped vs sequential; --quick keeps S (the speedup is
         # the claim) and only cuts the timed rounds
         "sweep": lambda: flbench.bench_sweep(rounds=8 if q else 16),
+        # heterogeneous strategy x seed grid, bucketed-vmap vs sequential;
+        # --quick keeps the grid (bucketing is the claim), cuts the rounds
+        "plan": lambda: flbench.bench_plan(rounds=8 if q else 16),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

@@ -180,6 +180,7 @@ class FLConfig:
     cohort: int = 0                   # 0 -> all clients each round
     local_epochs: int = 1
     local_steps: int = 1              # local optimizer steps per epoch
+    batch_size: int = 32              # per-client local batch (device gather)
     client_lr: float = 0.1
     client_optimizer: str = "sgd"     # sgd | sgdm | adam
     client_momentum: float = 0.0
@@ -222,6 +223,16 @@ class FLConfig:
 # additionally steers the data plane and the in-program cohort draw).
 SWEEPABLE_SCALARS = ("seed", "client_lr", "server_lr", "server_momentum",
                      "prox_mu", "moon_mu", "moon_tau", "dp_clip", "dp_noise")
+
+# FLConfig fields a campaign may sweep *categorically*: each value changes
+# the traced computation itself (strategy kind, topology reduction plan,
+# placement, sync-vs-async event loop, FedAsync-vs-FedBuff(K)), so these
+# axes cannot ride the scalar-plane vmap. The planner (core/plan.py)
+# buckets trajectories by program signature and vmaps within each bucket
+# instead — a heterogeneous grid compiles one program per bucket, not one
+# per trajectory.
+SWEEPABLE_CATEGORICAL = ("strategy", "topology", "placement", "mode",
+                         "async_buffer")
 
 
 @dataclass(frozen=True)

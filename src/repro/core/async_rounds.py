@@ -40,7 +40,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import determinism
-from repro.core.rounds import bind_hyper, local_train
+from repro.core.rounds import bind_hyper, freeze_unless, local_train, \
+    pop_alive
 from repro.core.strategy import Strategy, tree_add, tree_scale, tree_zeros_like
 from repro.data.pipeline import gather_one_client_batch
 from repro.sharding.axes import AxisCtx
@@ -61,7 +62,7 @@ def async_init_state(state: dict, ring: int) -> dict:
 
 
 def build_async_multi(model, strategy: Strategy, fl: FLConfig,
-                      batch_size: int = 32):
+                      batch_size=None):
     """Fuse ``n_events`` server events into one compiled program.
 
     Returns ``multi_fn(ctx, state, staged, sched, root, start_event,
@@ -73,11 +74,13 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
 
     ``state`` needs the async carries from ``async_init_state``.
     """
+    batch_size = batch_size or fl.batch_size
     steps = max(fl.local_steps, 1)
     fedbuff = max(fl.async_buffer, 1) > 1
 
     def multi_fn(ctx: AxisCtx, state, staged, sched, root, start_event,
                  n_events: int, hyper=None):
+        alive, hyper = pop_alive(hyper)
         fl_h, strategy_h = bind_hyper(fl, strategy, hyper)
         xs = {k: jax.lax.dynamic_slice_in_dim(v, start_event, n_events)
               for k, v in sched.items()}
@@ -119,6 +122,8 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
                 (params, server, acc, hist))
             new_st = dict(st, params=params, server=server, hist=hist,
                           acc=acc)
+            if alive is not None:
+                new_st = freeze_unless(alive, new_st, st)
             metrics = {"loss": loss,
                        "staleness": ev["staleness"].astype(jnp.float32),
                        "applied": ev["apply"].astype(jnp.float32),

@@ -107,6 +107,23 @@ def make_fault(raw: dict, fl: FLConfig) -> ClientSystemModel:
         availability=rt.get("availability", 1.0))
 
 
+def rebind(job: Job, fl: FLConfig) -> Job:
+    """A copy of ``job`` re-resolved around a different FLConfig.
+
+    The campaign planner expands one job into per-bucket configs whose
+    categorical coordinates (strategy, topology, mode, ...) differ from the
+    base; the derived objects (strategy, topology, dataset, fault) must be
+    rebuilt from the new config. The model (same arch for every lane) and
+    the ledger (one provenance chain per campaign) are shared by reference.
+    """
+    return dataclasses.replace(
+        job, fl=fl,
+        strategy=get_strategy(fl),
+        topology=get_topology(fl.topology, fl.gossip_steps),
+        dataset=make_dataset(job.raw, fl, getattr(job.model, "cfg", None)),
+        fault=make_fault(job.raw, fl))
+
+
 def load_job(path_or_dict) -> Job:
     if isinstance(path_or_dict, (str, pathlib.Path)):
         raw = yaml.safe_load(pathlib.Path(path_or_dict).read_text())

@@ -53,6 +53,31 @@ def bind_hyper(fl: FLConfig, strategy: Strategy, hyper):
     return fl_h, dataclasses.replace(strategy, fl=fl_h)
 
 
+def pop_alive(hyper):
+    """Split the lane-scheduler's alive mask off a hyper dict.
+
+    ``alive`` is the one hyper entry that is not a SWEEPABLE scalar: a
+    per-lane 0/1 float the campaign threads as a *runtime* value so the
+    lane scheduler (runtime/scheduler.py) can zero-weight dropped lanes
+    between chunk launches without recompiling. Returns ``(alive, rest)``
+    with ``alive`` None when absent (every single-run path)."""
+    if not hyper or "alive" not in hyper:
+        return None, hyper
+    rest = dict(hyper)
+    return rest.pop("alive"), rest
+
+
+def freeze_unless(alive, new_state, old_state):
+    """Select ``new_state`` where ``alive`` > 0, else keep ``old_state``.
+
+    A dropped lane's state freezes at its drop round: the select picks
+    whole computed tensors, so for alive lanes it is bitwise the identity
+    (the load-bearing property for the scheduler-off contract)."""
+    keep = alive > 0
+    return jax.tree.map(lambda n, o: jnp.where(keep, n, o),
+                        new_state, old_state)
+
+
 # ---------------------------------------------------------------------------
 # Per-client local training (pure; no cross-client communication)
 # ---------------------------------------------------------------------------
@@ -266,7 +291,7 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
 
 def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
                       placement: str = "spatial", fault=None,
-                      batch_size: int = 32):
+                      batch_size: Optional[int] = None):
     """Fuse ``rounds_per_launch`` FL rounds into one compiled program.
 
     Wraps a single-round program (spatial or temporal) in a ``jax.lax.scan``
@@ -304,11 +329,13 @@ def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
         raise ValueError(f"unknown placement {placement!r} "
                          "(want 'spatial' or 'temporal')")
     fault = fault if fault is not None else FaultModel(seed=fl.seed)
+    batch_size = batch_size or fl.batch_size
     steps = max(fl.local_steps, 1)
     target = int(fl.cohort or fl.n_clients)
 
     def multi_fn(ctx: AxisCtx, state, staged, root, start_round,
                  n_rounds: int, hyper=None):
+        alive, hyper = pop_alive(hyper)
         # a swept seed must also steer the in-program cohort draw
         fault_h = (dataclasses.replace(fault, seed=hyper["seed"])
                    if hyper and "seed" in hyper else fault)
@@ -319,7 +346,11 @@ def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
             batch = gather_client_batches(staged, rkey, batch_size, steps)
             mask = cohort_mask(fault_h, r, fl.n_clients, target,
                                fl.straggler_overprovision)
-            return single(ctx, st, batch, base_w * mask, rkey, hyper)
+            new_st, metrics = single(ctx, st, batch, base_w * mask, rkey,
+                                     hyper)
+            if alive is not None:
+                new_st = freeze_unless(alive, new_st, st)
+            return new_st, metrics
 
         rounds = start_round + jnp.arange(n_rounds)
         return jax.lax.scan(body, state, rounds)

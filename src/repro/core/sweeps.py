@@ -21,6 +21,13 @@ is what lets all S trajectories share ONE ``jax.vmap``-over-the-scan launch:
 and virtual clock) and the scalar plane (the in-program cohort draw folds it
 in), which is why it also appears in ``configs.base.SWEEPABLE_SCALARS``.
 
+A fourth plane exists for *categorical* axes (``strategy``, ``topology``,
+``placement``, ``mode``, ``async_buffer``): those values change the traced
+program itself, so they cannot share one vmap. ``parse_sweep`` accepts and
+validates them here; executing a heterogeneous grid is the campaign
+planner's job (``core/plan.py`` buckets trajectories by program signature,
+``runtime/scheduler.py::PlanExecutor`` runs one vmapped launch per bucket).
+
 Determinism contract: expansion is pure bookkeeping — trajectory ``s`` of a
 campaign is *bitwise identical* to a single run of the s-th expanded config
 (tests/test_sweeps.py), because threefry draws are vectorization-invariant
@@ -35,16 +42,49 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.configs.base import SWEEPABLE_SCALARS, FLConfig
+from repro.configs.base import (SWEEPABLE_CATEGORICAL, SWEEPABLE_SCALARS,
+                                FLConfig)
 from repro.core import determinism
 
 DATA_AXES = ("seed", "dirichlet_alpha")
 SCHEDULE_AXES = ("staleness_exponent",)
 SCALAR_AXES = tuple(k for k in SWEEPABLE_SCALARS if k != "seed")
-KNOWN_AXES = DATA_AXES + SCHEDULE_AXES + SCALAR_AXES
+CATEGORICAL_AXES = SWEEPABLE_CATEGORICAL
+KNOWN_AXES = DATA_AXES + SCHEDULE_AXES + SCALAR_AXES + CATEGORICAL_AXES
 
 # job-YAML convenience: `sweep: {seeds: [0, 1, 2]}`
 _AXIS_ALIASES = {"seeds": "seed"}
+
+# legal values per categorical axis; ``None`` -> resolved lazily from the
+# live registry (so new strategies are sweepable without touching this)
+_CATEGORICAL_CHOICES = {
+    "strategy": None,
+    "topology": ("client_server", "hierarchical", "decentralized"),
+    "placement": ("spatial", "temporal", "auto"),
+    "mode": ("sync", "async"),
+    "async_buffer": None,            # any int >= 0
+}
+
+
+def _categorical_values(name, values) -> Tuple[Any, ...]:
+    """Validate one categorical axis' values (did-you-mean on typos)."""
+    if name == "async_buffer":
+        return tuple(int(v) for v in values)
+    if name == "strategy":
+        from repro.core.strategies import REGISTRY
+        choices = tuple(sorted(REGISTRY))
+    else:
+        choices = _CATEGORICAL_CHOICES[name]
+    out = []
+    for v in values:
+        if v not in choices:
+            hint = difflib.get_close_matches(str(v), choices, n=1)
+            suffix = (f" — did you mean {hint[0]!r}?" if hint
+                      else f"; known values: {list(choices)}")
+            raise KeyError(
+                f"unknown {name} value {v!r} in sweep axis{suffix}")
+        out.append(str(v))
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +110,11 @@ class SweepSpec:
             return [{}]
         return [dict(zip(self.names, combo))
                 for combo in itertools.product(*(v for _, v in self.axes))]
+
+    @property
+    def categorical_names(self) -> Tuple[str, ...]:
+        """The swept axes whose values change the compiled program."""
+        return tuple(n for n in self.names if n in CATEGORICAL_AXES)
 
 
 def parse_sweep(section) -> Optional[SweepSpec]:
@@ -98,10 +143,15 @@ def parse_sweep(section) -> Optional[SweepSpec]:
         if not isinstance(values, (list, tuple)) or len(values) == 0:
             raise ValueError(f"sweep axis {raw_name!r} needs a non-empty "
                              f"list of values; got {values!r}")
-        if name == "seed":
-            values = [int(v) for v in values]
+        if name in CATEGORICAL_AXES:
+            values = _categorical_values(name, values)
+        elif name == "seed":
+            values = tuple(int(v) for v in values)
         else:
-            values = [float(v) for v in values]
+            values = tuple(float(v) for v in values)
+        if len(set(values)) != len(values):
+            raise ValueError(f"sweep axis {raw_name!r} repeats values "
+                             f"{values!r}; the grid would duplicate lanes")
         axes.append((name, tuple(values)))
     return SweepSpec(axes=tuple(axes))
 

@@ -91,6 +91,63 @@ def stage_partitions_stacked(trajectories):
             "idx": jnp.asarray(idx), "len": jnp.asarray(lens)}
 
 
+# Per-leaf vmap axes for a deduped campaign staging: the concatenated root
+# (x, y) is shared across lanes (no sweep axis), only the small per-lane
+# index/length planes carry the leading (S,) dim.
+DEDUP_STAGED_AXES = {"x": None, "y": None, "idx": 0, "len": 0}
+
+
+def stage_partitions_dedup(trajectories, keys=None):
+    """Stage S trajectories with the shared root datasets deduplicated.
+
+    ``stage_partitions_stacked`` duplicates the root dataset S times even
+    when every lane shares it (any scalar-only sweep) — the ROADMAP memory
+    item. Here lanes that share a data-plane triple share ONE device copy:
+    the unique roots concatenate along the item axis, and each lane's padded
+    index matrix is offset into the concatenation, which IS the
+    lane->dataset indirection — the gather functions stay untouched and the
+    drawn batches are bitwise identical (positions are drawn in
+    [0, true len) and the offset just relocates the same bytes). Returns
+    ``(staged, lane_ds)``:
+
+      x ((sum_u N_u), ...)  y ((sum_u N_u),)   shared concatenated roots
+      idx (S, C, Lmax)      len (S, C)          per-lane (offset) planes
+
+    plus ``lane_ds`` (S,) int32 mapping each lane to its unique dataset (for
+    introspection/tests; the indirection itself is baked into ``idx``).
+    ``keys`` are optional hashable dedup keys per trajectory (the campaign
+    passes its staging-cache keys); identity is the default.
+    """
+    keys = list(keys) if keys is not None else [id(t) for t in trajectories]
+    if len(keys) != len(trajectories):
+        raise ValueError(f"{len(keys)} dedup keys for "
+                         f"{len(trajectories)} trajectories")
+    n_clients = {len(parts) for _, _, parts in trajectories}
+    if len(n_clients) != 1:
+        raise ValueError(f"trajectories disagree on n_clients: {n_clients}")
+    uniq: dict = {}
+    roots = []
+    for k, t in zip(keys, trajectories):
+        if k not in uniq:
+            uniq[k] = len(roots)
+            roots.append(t)
+    lane_ds = np.asarray([uniq[k] for k in keys], np.int32)
+    lmax = max(max((max((len(p) for p in parts), default=1), 1)
+                   for _, _, parts in roots))
+    offsets = np.concatenate(
+        [[0], np.cumsum([np.asarray(x).shape[0] for x, _, _ in roots])])
+    x_cat = np.concatenate([np.asarray(x) for x, _, _ in roots])
+    y_cat = np.concatenate([np.asarray(y) for _, y, _ in roots])
+    pads = [_pad_idx(parts, lmax) + np.int32(offsets[u])
+            for u, (_, _, parts) in enumerate(roots)]
+    lens = [np.asarray([len(p) for p in parts], np.int32)
+            for _, _, parts in roots]
+    staged = {"x": jnp.asarray(x_cat), "y": jnp.asarray(y_cat),
+              "idx": jnp.asarray(np.stack([pads[u] for u in lane_ds])),
+              "len": jnp.asarray(np.stack([lens[u] for u in lane_ds]))}
+    return staged, lane_ds
+
+
 def gather_one_client_batch(staged, round_key, client, batch_size: int,
                             n_steps: int):
     """Jittable batch gather for a single (possibly traced) client id.

@@ -4,25 +4,42 @@ The paper's headline is streamlined benchmarking of "a plethora" of FL
 experiments from job configs; a multi-seed, multi-alpha comparison used to
 cost S sequential runs of the Executor. Here the *trajectory* becomes a
 batch axis: ``core/sweeps.py`` expands the job's ``sweep:`` section into S
-per-trajectory configs split into a data plane (staged partitions stacked to
-``(S, C, Lmax)``; async schedules stacked to ``(S, E)``) and a scalar plane
-(traced ``(S,)`` knob arrays threaded through ``rounds.bind_hyper``), and
-``CampaignExecutor`` wraps the *same* sync round scan / async event scan the
-single-run Executor compiles in an outer ``jax.vmap``. One launch advances
-all S trajectories; the host chunk loop, checkpoint/ledger/eval boundary
-I/O, and the bitwise chunking contract are inherited from ``Executor``.
+per-trajectory configs split into a data plane (unique root datasets staged
+once and shared via an offset-index indirection — scalar-only sweeps no
+longer duplicate the dataset S times; per-lane ``idx``/``len`` planes carry
+the ``(S,)`` dim), a schedule plane (async schedules stacked to ``(S, E)``)
+and a scalar plane (traced ``(S,)`` knob arrays threaded through
+``rounds.bind_hyper``), and ``CampaignExecutor`` wraps the *same* sync round
+scan / async event scan the single-run Executor compiles in an outer
+``jax.vmap``. One launch advances all S trajectories; the host chunk loop,
+checkpoint/ledger/eval boundary I/O, and the bitwise chunking contract are
+inherited from ``Executor``.
 
-Determinism contract (tests/test_sweeps.py): lane ``s`` of a campaign is
-**bitwise identical** to an independent single run of the s-th expanded
-config — threefry draws are vectorization-invariant (the same argument
-``gather_client_batches`` relies on), the stacked staging pads are
-unobservable, and the scalar plane only swaps Python floats for
-equal-valued traced f32s. Chunked == unchunked also holds under the sweep
-axis, so campaigns checkpoint/resume like single runs (the stacked state is
-one pytree).
+One executor serves one *program signature* (``core/plan.py``): every lane
+must trace to the job's compiled program. Heterogeneous sweeps (categorical
+axes — strategy/topology/placement/mode/async_buffer) go through the
+planner, which buckets lanes by signature and instantiates one
+``CampaignExecutor`` per bucket via the ``lanes`` override
+(``runtime/scheduler.py::PlanExecutor``).
+
+The lane scheduler's per-lane ``alive`` mask threads into the compiled
+program as a runtime value alongside the scalar plane: a dropped lane's
+state freezes (``rounds.freeze_unless``) with **no recompilation**, its
+rows stop landing in the results table, and its ledger blocks stop.
+
+Determinism contract (tests/test_sweeps.py, tests/test_plan.py): lane ``s``
+of a campaign is **bitwise identical** to an independent single run of the
+s-th expanded config — threefry draws are vectorization-invariant (the same
+argument ``gather_client_batches`` relies on), the offset gather relocates
+identical bytes, the stacked pads are unobservable, the scalar plane only
+swaps Python floats for equal-valued traced f32s, and the alive select is
+the bitwise identity for alive lanes. Chunked == unchunked also holds under
+the sweep axis, so campaigns checkpoint/resume like single runs (the
+stacked state is one pytree).
 
 Results land in a tidy table keyed by sweep coordinates (one row per
-trajectory per round) — ``campaign.csv`` always, ``campaign.parquet`` when
+trajectory per round) — ``campaign.csv`` always (appended per chunk, not
+rewritten: O(S*R) total, not O(S*R^2)), ``campaign.parquet`` when
 pandas+pyarrow are importable; ``benchmarks/figures.campaign_curves`` draws
 multi-seed mean±band curves from it.
 """
@@ -41,56 +58,181 @@ import numpy as np
 from repro.core import sweeps
 from repro.core.blockchain import param_digest
 from repro.core.jobs import make_dataset, make_fault
+from repro.core.plan import program_signature
 from repro.core.rounds import init_state
-from repro.data.pipeline import stage_partitions_stacked
+from repro.data.pipeline import DEDUP_STAGED_AXES, stage_partitions_dedup
 from repro.runtime.executor import Executor
 
-_INT_COLS = ("seed", "traj", "round")
+_INT_COLS = ("seed", "traj", "round", "bucket", "lane", "async_buffer")
+
+
+def _parse_cell(k: str, v: str):
+    if k in _INT_COLS:
+        return int(float(v))
+    try:
+        return float(v)
+    except ValueError:
+        return v                        # categorical coords stay strings
 
 
 def read_results(csv_path) -> list:
-    """Read a campaign.csv back into tidy rows (numbers, not strings);
-    blank cells (eval columns off the chunk tails) are dropped. The single
-    parser for the campaign table — resume and figures both use it."""
+    """Read a campaign.csv back into tidy rows (numbers where numeric,
+    categorical coordinates as strings); blank cells (eval columns off the
+    chunk tails) are dropped. The single parser for the campaign table —
+    resume and figures both use it."""
     with open(csv_path, newline="") as f:
-        return [{k: (int(float(v)) if k in _INT_COLS else float(v))
-                 for k, v in row.items() if v != ""}
+        return [{k: _parse_cell(k, v) for k, v in row.items() if v != ""}
                 for row in csv.DictReader(f)]
+
+
+def table_columns(rows, lead) -> list:
+    """The tidy table's column order: lead columns, then the rest sorted."""
+    return list(lead) + sorted({k for r in rows for k in r} - set(lead))
+
+
+def write_parquet(rows, lead, out_dir):
+    """Best-effort ``campaign.parquet`` next to the CSV (pandas+pyarrow
+    optional; the CSV is the portable artifact). One helper for the
+    single-campaign and merged-plan tables so their schemas cannot
+    drift."""
+    try:
+        import pandas as pd
+        pd.DataFrame(rows, columns=table_columns(rows, lead)).to_parquet(
+            pathlib.Path(out_dir) / "campaign.parquet")
+    except Exception:
+        pass
+
+
+class AppendTable:
+    """Append-only tidy CSV writer.
+
+    The PR 3 executor rewrote the whole table at every chunk boundary —
+    O(S*R^2) rows written over a campaign. Here a chunk appends only its new
+    rows; a full rewrite happens only when the column set changes (in
+    practice: the first flush, and a resume re-adopting a prior table).
+    ``appends``/``rewrites`` are the instrumentation the satellite test
+    asserts on.
+    """
+
+    def __init__(self, path):
+        self.path = pathlib.Path(path)
+        self.appends = 0
+        self.rewrites = 0
+        self._fieldnames = None
+        self._written = 0
+
+    def reset(self):
+        """Forget on-disk state (next flush rewrites) — the resume path."""
+        self._fieldnames = None
+        self._written = 0
+
+    def flush(self, rows, lead):
+        """Bring the CSV up to date with ``rows`` (lead columns first).
+        The steady-state path only inspects the rows added since the last
+        flush — per-boundary cost is O(new), not O(total) — and falls back
+        to a full rewrite only when a new column appears."""
+        new = rows[self._written:]
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        if (self._fieldnames is not None and self.path.exists()
+                and self._written):
+            grown = {k for r in new for k in r} - set(self._fieldnames)
+            if not grown:
+                if new:
+                    with open(self.path, "a", newline="") as f:
+                        csv.DictWriter(f,
+                                       fieldnames=self._fieldnames
+                                       ).writerows(new)
+                    self.appends += 1
+                self._written = len(rows)
+                return self.path
+        keys = table_columns(rows, lead)
+        with open(self.path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(rows)
+        self.rewrites += 1
+        self._fieldnames = keys
+        self._written = len(rows)
+        return self.path
 
 
 @dataclasses.dataclass
 class CampaignExecutor(Executor):
     """Executor over the sweep axis: same compiled programs, outer vmap.
 
-    ``job`` must carry a ``sweep:`` section (``job.sweep``). ``eval_fn``
-    keeps the single-run signature ``params -> dict`` and is applied per
-    trajectory lane. ``out_dir`` (if set) receives the results table at the
-    end of ``run()``.
+    ``job`` must carry a ``sweep:`` section (``job.sweep``) — or the planner
+    passes an explicit ``lanes=(coords, fls)`` subset (one signature
+    bucket). ``eval_fn`` keeps the single-run signature ``params -> dict``
+    and is applied per trajectory lane. ``out_dir`` (if set) receives the
+    results table at every chunk boundary.
     """
     out_dir: Optional[str] = None
+    lanes: Optional[tuple] = None     # (coords, fls) bucket override
+    parquet: bool = True              # planner buckets defer to the merge
+    # Thread the per-lane alive mask through the compiled programs. The
+    # planner sets this when a lane scheduler is attached; without one the
+    # mask (and its per-round state select) stays out of the program
+    # entirely, so scheduler-off campaigns pay nothing for schedulability.
+    lane_scheduling: bool = False
 
     def __post_init__(self):
         if self.job.sweep is None:
             raise ValueError("CampaignExecutor needs a job with a sweep: "
                              "section (see core/sweeps.py for the axes)")
         self.spec = self.job.sweep
-        self.coords = self.spec.coords()
-        self.fls = sweeps.expand(self.job.fl, self.spec)
+        if self.lanes is not None:
+            self.coords = list(self.lanes[0])
+            self.fls = list(self.lanes[1])
+        else:
+            self.coords = self.spec.coords()
+            self.fls = sweeps.expand(self.job.fl, self.spec)
+        sigs = {program_signature(f, self.job.arch) for f in self.fls}
+        sigs.add(program_signature(self.job.fl, self.job.arch))
+        if len(sigs) > 1:
+            raise ValueError(
+                "CampaignExecutor lanes span multiple program signatures "
+                f"({len(sigs)}); heterogeneous sweeps (categorical axes "
+                f"{self.spec.categorical_names}) must go through the "
+                "planner: runtime.scheduler.PlanExecutor")
         self.S = len(self.fls)
+        self.alive = np.ones(self.S, np.float32)   # lane-scheduler mask
+        self._hyper_launch = None     # cached hyper+alive (device) dict
         self.results = []              # tidy rows: coords + traj/round/metrics
-        self._tail_rows = []           # last-round row per trajectory
+        self._tail_rows = []           # (lane, row) pairs, last round/lane
+        self._table = (AppendTable(pathlib.Path(self.out_dir) /
+                                   "campaign.csv")
+                       if self.out_dir else None)
         super().__post_init__()
 
-    # -- scaffold hooks: stacked staging + vmapped init --------------------
+    # -- lane scheduler interface -----------------------------------------
+    def drop_lane(self, s: int):
+        """Zero-weight lane ``s`` from the next launch on: its state
+        freezes inside the already-compiled program (the alive mask is a
+        runtime input) and it stops producing table rows and ledger blocks.
+        The planner keeps the lane -> drop-round record
+        (``PlanExecutor.dropped``)."""
+        if not self.lane_scheduling:
+            raise RuntimeError(
+                "drop_lane needs lane_scheduling=True at construction (the "
+                "alive mask must be in the compiled program from launch 1 "
+                "for a mid-campaign drop not to recompile it)")
+        self.alive[s] = 0.0
+        self._hyper_launch = None     # next launch re-stages the mask
+
+    def alive_lanes(self):
+        return [s for s in range(self.S) if self.alive[s] > 0]
+
+    # -- scaffold hooks: deduped staging + vmapped init --------------------
     def _stage_data(self):
         """Data plane: restage per distinct (seed, partition, alpha);
-        scalar-only sweeps share one triple (stacking still duplicates on
-        device, which is what keeps every lane's gather identical to a
-        single run). Also builds the scalar plane + per-trajectory roots.
+        lanes sharing a triple share ONE staged root on device (the padded
+        index matrices carry the lane->dataset indirection as offsets into
+        the concatenated roots, so every lane's gather stays bitwise a
+        single run's). Also builds the scalar plane + per-trajectory roots.
         ``self.data`` is the list of per-trajectory (x, y, parts) host
         views (eval_fn consumers index it by lane)."""
         cfg = getattr(self.job.model, "cfg", None)
-        cache, trajs = {}, []
+        cache, trajs, keys = {}, [], []
         for fl_s in self.fls:
             k = (fl_s.seed, fl_s.partition, fl_s.dirichlet_alpha)
             if k not in cache:
@@ -98,9 +240,10 @@ class CampaignExecutor(Executor):
                 cache[k] = ds.distribute_into_chunks(
                     fl_s.partition, fl_s.n_clients, fl_s.dirichlet_alpha)
             trajs.append(cache[k])
+            keys.append(k)
         self.trajectories = trajs
         self.data = trajs
-        self.staged = stage_partitions_stacked(trajs)
+        self.staged, self.lane_ds = stage_partitions_dedup(trajs, keys)
         self.roots = sweeps.root_keys(self.fls)
         self.hyper = sweeps.scalar_plane(self.fls)
 
@@ -112,15 +255,18 @@ class CampaignExecutor(Executor):
             self.roots)
 
     def _post_restore(self):
-        """Resume path: re-adopt the pre-restart rows (the table is
-        rewritten at every chunk boundary, so a completed chunk is never
-        lost) — without this a resumed campaign would silently write a
-        table missing every pre-resume round."""
+        """Resume path: re-adopt the pre-restart rows (completed chunks are
+        flushed, so a crash loses at most the open chunk) — without this a
+        resumed campaign would silently write a table missing every
+        pre-resume round. The append table resets so the first post-resume
+        flush rewrites the (possibly crash-truncated) file consistently."""
         if self.round_idx > 0 and self.out_dir:
             prior = pathlib.Path(self.out_dir) / "campaign.csv"
             if prior.exists():
                 self.results = [r for r in read_results(prior)
                                 if r["round"] < self.round_idx]
+        if self._table is not None:
+            self._table.reset()
 
     def _build_schedule(self, n_rounds: int):
         """Per-trajectory virtual-clock schedules (seed and
@@ -148,12 +294,15 @@ class CampaignExecutor(Executor):
                 lambda st: async_init_state(st, ring))(self.state)
 
     # -- compiled programs: the Executor's, under an outer vmap ------------
+    # The concatenated roots (x, y) are NOT mapped over the sweep axis
+    # (DEDUP_STAGED_AXES): one device copy serves every lane.
     def _round_program(self, n_rounds: int):
         if n_rounds not in self._programs:
             def launch(s, staged, roots, hyper, start, n=n_rounds):
                 return jax.vmap(
                     lambda st, sg, rt, hp:
-                    self._multi(self.ctx, st, sg, rt, start, n, hp))(
+                    self._multi(self.ctx, st, sg, rt, start, n, hp),
+                    in_axes=(0, DEDUP_STAGED_AXES, 0, 0))(
                     s, staged, roots, hyper)
             self._programs[n_rounds] = jax.jit(launch)
         return self._programs[n_rounds]
@@ -164,28 +313,50 @@ class CampaignExecutor(Executor):
             def launch(s, staged, sched, roots, hyper, start, n=n_events):
                 return jax.vmap(
                     lambda st, sg, sd, rt, hp:
-                    self._multi(self.ctx, st, sg, sd, rt, start, n, hp))(
+                    self._multi(self.ctx, st, sg, sd, rt, start, n, hp),
+                    in_axes=(0, DEDUP_STAGED_AXES, 0, 0, 0))(
                     s, staged, sched, roots, hyper)
             self._programs[key] = jax.jit(launch)
         return self._programs[key]
 
     # -- chunk launches (the inherited _chunk_loop drives these) ----------
+    def _launch_hyper(self):
+        """The scalar plane, plus — under a lane scheduler — the alive
+        mask as a runtime (S,) input, so drops never recompile. Cached
+        between launches; a drop invalidates it."""
+        if not self.lane_scheduling:
+            return self.hyper
+        if self._hyper_launch is None:
+            self._hyper_launch = dict(self.hyper,
+                                      alive=jnp.asarray(self.alive))
+        return self._hyper_launch
+
+    def _skip_dead_bucket(self, n: int):
+        """All lanes dropped: the compiled program would freeze every lane
+        anyway, so skip the launch and emit placeholder logger rows."""
+        self._tail_rows = []
+        return [{"n_alive": 0, "round_s": 0.0} for _ in range(n)]
+
     def _launch_sync(self, start: int, n: int):
+        if not self.alive_lanes():
+            return self._skip_dead_bucket(n)
         t0 = time.time()
         state, metrics = self._round_program(n)(
-            self.state, self.staged, self.roots, self.hyper, start)
+            self.state, self.staged, self.roots, self._launch_hyper(), start)
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
         stacked = {k: np.asarray(v) for k, v in metrics.items()}  # (S, n)
         return self._table_rows(stacked, start, n, dt)
 
     def _launch_async(self, start: int, n: int):
+        if not self.alive_lanes():
+            return self._skip_dead_bucket(n)
         epr = self.events_per_round
         n_ev = n * epr
         t0 = time.time()
         state, metrics = self._event_program(n_ev)(
-            self.state, self.staged, self.sched_dev, self.roots, self.hyper,
-            start * epr)
+            self.state, self.staged, self.sched_dev, self.roots,
+            self._launch_hyper(), start * epr)
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
         ev = {k: np.asarray(v).reshape(self.S, n, epr)
@@ -196,38 +367,43 @@ class CampaignExecutor(Executor):
         return self._table_rows(stacked, start, n, dt)
 
     def _table_rows(self, stacked, start: int, n: int, dt: float):
-        """Append per-(trajectory, round) rows to the tidy results table;
-        return per-round rows (trajectory means) for the inherited logger."""
+        """Append per-(trajectory, round) rows to the tidy results table
+        (alive lanes only — a dropped lane stops contributing past its drop
+        round); return per-round rows (alive-lane means) for the inherited
+        logger."""
         self._tail_rows = []
-        for s in range(self.S):
+        live = self.alive_lanes()
+        for s in live:
             for i in range(n):
                 row = {**self.coords[s], "traj": s, "round": start + i,
                        **{k: float(v[s, i]) for k, v in stacked.items()},
                        "round_s": dt / n}
                 self.results.append(row)
                 if i == n - 1:
-                    self._tail_rows.append(row)
-        return [dict({k: float(v[:, i].mean()) for k, v in stacked.items()},
-                     round_s=dt / n) for i in range(n)]
+                    self._tail_rows.append((s, row))
+        idx = np.asarray(live, np.int64)
+        return [dict({k: float(v[idx, i].mean()) for k, v in stacked.items()},
+                     round_s=dt / n, n_alive=len(live)) for i in range(n)]
 
     def _ledger_record(self, last: int):
-        """One ledger block per trajectory lane: the digest of lane ``s``
-        equals the digest of the s-th single run (bitwise contract), so
-        per-run provenance stays auditable — a digest of the stacked pytree
-        would certify parameters no run ever produced."""
-        for s in range(self.S):
+        """One ledger block per (alive) trajectory lane: the digest of lane
+        ``s`` equals the digest of the s-th single run (bitwise contract),
+        so per-run provenance stays auditable — a digest of the stacked
+        pytree would certify parameters no run produced."""
+        for s in self.alive_lanes():
             params_s = jax.tree.map(lambda t: t[s], self.state["params"])
             self.job.ledger.record_global(last, params_s)
             self.kv.publish(f"global_digest/{last}/traj{s}",
                             param_digest(params_s))
 
     def _merge_eval(self, rows):
-        """Per-lane eval at the chunk boundary: merged into each
-        trajectory's tail row of the results table, means into the logger."""
+        """Per-lane eval at the chunk boundary: merged into each alive
+        trajectory's tail row of the results table, means into the
+        logger."""
         if self.eval_fn is None:
             return
         agg = {}
-        for s, row in enumerate(self._tail_rows):
+        for s, row in self._tail_rows:
             params_s = jax.tree.map(lambda t: t[s], self.state["params"])
             ev = {k: float(v) for k, v in self.eval_fn(params_s).items()}
             row.update(ev)
@@ -236,42 +412,44 @@ class CampaignExecutor(Executor):
         rows[-1].update({k: float(np.mean(v)) for k, v in agg.items()})
 
     # -- results table -----------------------------------------------------
+    def _lead_columns(self):
+        return [*self.spec.names, "traj", "round"]
+
     def _finish_chunk(self, start: int, n: int, rows):
         super()._finish_chunk(start, n, rows)
-        # rewrite the table at every chunk boundary (it is small): a crash
-        # loses at most the open chunk, and resume re-adopts what is there
-        if self.out_dir:
-            self.write_results()
+        # append this chunk's rows: a crash loses at most the open chunk,
+        # and resume re-adopts what is there
+        if self._table is not None:
+            self._table.flush(self.results, self._lead_columns())
 
     def run(self, rounds: Optional[int] = None):
         state, logger = super().run(rounds)
         if self.out_dir:
-            self.write_results()
+            self._table.flush(self.results, self._lead_columns())
+            if self.parquet:
+                write_parquet(self.results, self._lead_columns(),
+                              self.out_dir)
         return state, logger
 
     def trajectory_params(self, s: int):
-        """Lane ``s``'s params (bitwise the s-th single run's)."""
+        """Lane ``s``'s params (bitwise the s-th single run's; frozen at
+        the drop round for scheduler-dropped lanes)."""
         return jax.tree.map(lambda t: np.asarray(t[s]),
                             self.state["params"])
 
     def write_results(self, out_dir=None):
-        """Write the tidy results table: ``campaign.csv`` (always) and
-        ``campaign.parquet`` (when pandas+pyarrow are importable). Schema:
-        one row per (trajectory, round) — sweep coordinate columns in axis
-        order, then ``traj``, ``round``, metric columns."""
+        """Write the tidy results table in full: ``campaign.csv`` (always)
+        and ``campaign.parquet`` (when pandas+pyarrow are importable).
+        Schema: one row per (trajectory, round) — sweep coordinate columns
+        in axis order, then ``traj``, ``round``, metric columns. The chunk
+        loop appends incrementally instead (AppendTable); this is the
+        explicit full-export entry point."""
         out = pathlib.Path(out_dir or self.out_dir or ".")
         out.mkdir(parents=True, exist_ok=True)
-        lead = [*self.spec.names, "traj", "round"]
-        keys = lead + sorted({k for r in self.results for k in r} - set(lead))
-        csv_path = out / "campaign.csv"
-        with open(csv_path, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=keys)
-            w.writeheader()
-            w.writerows(self.results)
-        try:
-            import pandas as pd
-            pd.DataFrame(self.results, columns=keys).to_parquet(
-                out / "campaign.parquet")
-        except Exception:
-            pass                       # CSV is the portable artifact
+        table = (self._table if self._table is not None
+                 and out == pathlib.Path(self.out_dir or ".")
+                 else AppendTable(out / "campaign.csv"))
+        table.reset()                  # force a consistent full rewrite
+        csv_path = table.flush(self.results, self._lead_columns())
+        write_parquet(self.results, self._lead_columns(), out)
         return csv_path

@@ -41,6 +41,7 @@ from repro.configs.base import SWEEPABLE_SCALARS
 from repro.core import determinism
 from repro.core.blockchain import param_digest
 from repro.core.kvstore import KVStore
+from repro.core.plan import resolve_placement
 from repro.core.rounds import build_multi_round, init_state
 from repro.data.pipeline import stage_partitions
 from repro.metrics.logger import PerformanceLogger
@@ -59,7 +60,9 @@ class Executor:
         self.kv = KVStore()
         self.logger = self.logger or PerformanceLogger(run_name=self.job.name)
         fl = self.job.fl
-        self.placement = fl.placement if fl.placement != "auto" else "spatial"
+        # single source of truth with core/plan.py's program signatures:
+        # a drift here would bucket lanes whose compiled programs differ
+        self.placement = resolve_placement(fl)
         self.mode = fl.mode
         if self.mode == "async":
             from repro.core.async_rounds import build_async_multi
@@ -88,6 +91,21 @@ class Executor:
         self.hyper = {"seed": jnp.int32(fl.seed)}
         self.hyper.update({k: jnp.float32(getattr(fl, k))
                            for k in SWEEPABLE_SCALARS if k != "seed"})
+
+    def compiled_programs(self) -> int:
+        """How many distinct XLA programs this executor has compiled —
+        the planner's bucket-count contract ("a 24-point grid with 4
+        signatures compiles 4 programs") is asserted against this. Reads
+        the jit caches when the jax version exposes them; falls back to
+        one per (program, scan length) entry."""
+        total = 0
+        for prog in self._programs.values():
+            size = getattr(prog, "_cache_size", None)
+            try:
+                total += int(size()) if callable(size) else 1
+            except Exception:
+                total += 1
+        return total
 
     def _round_program(self, n_rounds: int):
         """Jitted n_rounds-launch; at most two lengths ever compile (the

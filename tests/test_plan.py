@@ -1,0 +1,461 @@
+"""Campaign planner + lane scheduler tests (heterogeneous sweeps).
+
+Extends the PR 3 campaign contract to categorical axes: a heterogeneous
+strategy x topology x seed grid buckets by program signature, each bucket
+runs as one vmapped launch, and — scheduler off — every lane is bitwise
+identical to its independent single run. With successive halving on,
+dropped lanes freeze at their drop round (bitwise a truncated single run),
+survivors stay bitwise their full single runs, and drops land in the
+ledger. Plus the satellites: bucketer properties, data-plane dedup, and
+the append-only results table.
+"""
+import itertools
+import os
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import sweeps
+from repro.core.jobs import load_job
+from repro.core.plan import build_plan, program_signature
+from repro.runtime.campaign import CampaignExecutor, read_results
+from repro.runtime.executor import Executor
+from repro.runtime.scheduler import PlanExecutor, SuccessiveHalving
+
+
+def _raw(coord=None, sweep=None, *, mode="sync", rounds=2, chunk=1,
+         n_clients=4, n_items=96, arch="flsim-logreg", blockchain="none"):
+    """One job dict; ``coord`` overrides (categorical + scalar) land in
+    their proper sections — the single-run references for each campaign
+    lane are built this way."""
+    coord = coord or {}
+    tp = {"n_clients": n_clients, "local_epochs": 1,
+          "client_lr": coord.get("client_lr", 0.1),
+          "rounds": rounds, "seed": coord.get("seed", 3),
+          "rounds_per_launch": chunk,
+          "topology": coord.get("topology", "client_server"),
+          "placement": coord.get("placement", "auto"),
+          "blockchain": blockchain}
+    if mode == "async" or coord.get("mode") == "async":
+        tp.update({"mode": "async",
+                   "async_buffer": coord.get("async_buffer", 3),
+                   "max_staleness": 4, "staleness_exponent": 0.5})
+    return {
+        "name": "plan-test",
+        "model": {"arch": arch},
+        "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                    "distribution": {
+                        "partition": "dirichlet",
+                        "dirichlet_alpha": coord.get("dirichlet_alpha",
+                                                     0.5)}},
+        "strategy": {"strategy": coord.get("strategy", "fedavg"),
+                     "train_params": tp},
+        **({"sweep": sweep} if sweep else {}),
+    }
+
+
+def _assert_bitwise_equal(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# categorical axis parsing / validation
+# ---------------------------------------------------------------------------
+
+def test_categorical_axis_value_near_miss():
+    with pytest.raises(KeyError, match="fedprox"):
+        sweeps.parse_sweep({"strategy": ["fedprx"]})
+    with pytest.raises(KeyError, match="hierarchical"):
+        sweeps.parse_sweep({"topology": ["hierarchal"]})
+    with pytest.raises(KeyError, match="async"):
+        sweeps.parse_sweep({"mode": ["asinc"]})
+
+
+def test_categorical_axis_name_near_miss():
+    with pytest.raises(KeyError, match="topology"):
+        sweeps.parse_sweep({"topolgy": ["client_server"]})
+
+
+def test_duplicate_axis_values_rejected():
+    with pytest.raises(ValueError, match="repeats"):
+        sweeps.parse_sweep({"strategy": ["fedavg", "fedavg"]})
+    with pytest.raises(ValueError, match="repeats"):
+        sweeps.parse_sweep({"seeds": [1, 1]})
+
+
+def test_mixed_grid_exact_cross_product():
+    spec = sweeps.parse_sweep({"strategy": ["fedavg", "fedprox"],
+                               "seeds": [0, 1], "client_lr": [0.1, 0.2]})
+    coords = spec.coords()
+    want = [dict(zip(("strategy", "seed", "client_lr"), c))
+            for c in itertools.product(("fedavg", "fedprox"), (0, 1),
+                                       (0.1, 0.2))]
+    assert coords == want
+    assert spec.size == 8 == len(coords)
+    assert len({tuple(sorted(c.items())) for c in coords}) == 8  # no dups
+    assert spec.categorical_names == ("strategy",)
+
+
+# ---------------------------------------------------------------------------
+# program signatures + bucketing
+# ---------------------------------------------------------------------------
+
+def test_signature_canonicalization():
+    base = FLConfig()
+    # placement auto resolves before hashing
+    assert program_signature(base.__class__(placement="auto")) == \
+        program_signature(base.__class__(placement="spatial"))
+    # FedAsync: buffer 0 and 1 are the same event loop
+    assert program_signature(FLConfig(mode="async", async_buffer=0)) == \
+        program_signature(FLConfig(mode="async", async_buffer=1))
+    # sync programs never read async knobs
+    assert program_signature(FLConfig(max_staleness=4)) == \
+        program_signature(FLConfig(max_staleness=8))
+    # the async event loop has no topology/placement
+    assert program_signature(
+        FLConfig(mode="async", topology="client_server")) == \
+        program_signature(FLConfig(mode="async", topology="hierarchical"))
+    # but the scalar plane never splits signatures
+    assert program_signature(FLConfig(client_lr=0.1)) == \
+        program_signature(FLConfig(client_lr=0.5))
+    # and structural axes do
+    assert program_signature(FLConfig(strategy="fedavg")) != \
+        program_signature(FLConfig(strategy="fedprox"))
+    assert program_signature(FLConfig(mode="async", async_buffer=3)) != \
+        program_signature(FLConfig(mode="async", async_buffer=4))
+
+
+def _check_plan_invariants(section):
+    spec = sweeps.parse_sweep(section)
+    p = build_plan(FLConfig(), spec, arch="flsim-logreg")
+    # buckets partition the grid exactly
+    all_lanes = sorted(i for b in p.buckets for i in b.lane_ids)
+    assert all_lanes == list(range(p.size))
+    assert p.size == spec.size == len(list(
+        itertools.product(*(v for _, v in spec.axes))))
+    # same bucket <=> equal signature
+    for b in p.buckets:
+        assert all(p.signatures[i] == b.signature for i in b.lane_ids)
+    sigs = {b.signature for b in p.buckets}
+    assert len(sigs) == len(p.buckets)
+    # lane_bucket round-trips
+    for lane in range(p.size):
+        bi, j = p.lane_bucket(lane)
+        assert p.buckets[bi].lane_ids[j] == lane
+
+
+def test_bucketer_invariants_fixed_grids():
+    _check_plan_invariants({"strategy": ["fedavg", "fedprox", "scaffold"],
+                            "topology": ["client_server", "hierarchical"],
+                            "seeds": [0, 1]})
+    _check_plan_invariants({"placement": ["auto", "spatial", "temporal"],
+                            "client_lr": [0.1, 0.2]})
+    _check_plan_invariants({"mode": ["sync", "async"], "seeds": [0, 1, 2]})
+    _check_plan_invariants({"async_buffer": [0, 1, 4], "seeds": [0, 1]})
+
+
+def test_bucketer_property_equal_signature_iff_same_bucket():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    axis_pool = {
+        "strategy": ["fedavg", "fedprox", "fedavgm", "scaffold"],
+        "topology": ["client_server", "hierarchical", "decentralized"],
+        "placement": ["auto", "spatial"],
+        "mode": ["sync", "async"],
+        "async_buffer": [0, 1, 3],
+        "seed": [0, 1, 2],
+        "client_lr": [0.05, 0.1, 0.2],
+    }
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def inner(data):
+        section = {}
+        for name, pool in axis_pool.items():
+            vals = data.draw(st.lists(st.sampled_from(pool), min_size=0,
+                                      max_size=len(pool), unique=True))
+            if vals:
+                section[name] = vals
+        if not section:
+            section = {"seed": [0]}
+        spec = sweeps.parse_sweep(section)
+        p = build_plan(FLConfig(), spec, arch="flsim-mlp")
+        _check_plan_invariants(section)
+        # pairwise: same bucket <=> equal signatures
+        lane_of = {i: b.index for b in p.buckets for i in b.lane_ids}
+        for i in range(p.size):
+            for j in range(i + 1, p.size):
+                same = lane_of[i] == lane_of[j]
+                assert same == (p.signatures[i] == p.signatures[j])
+
+    inner()
+
+
+def test_placement_auto_and_spatial_share_a_bucket():
+    spec = sweeps.parse_sweep({"placement": ["auto", "spatial", "temporal"]})
+    p = build_plan(FLConfig(), spec, arch="flsim-logreg")
+    assert len(p.buckets) == 2
+    assert p.buckets[0].lane_ids == (0, 1)     # auto == spatial
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous execution: the bitwise contract, scheduler off
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_sync_campaign_bitwise_equals_single_runs():
+    """strategy x topology x seed: 8 lanes, 4 program signatures, every
+    lane bitwise its independent single run."""
+    sweep = {"strategy": ["fedavg", "fedprox"],
+             "topology": ["client_server", "hierarchical"],
+             "seeds": [3, 5]}
+    pe = PlanExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    assert pe.S == 8 and len(pe.plan.buckets) == 4
+    pe.run()
+    for lane, coord in enumerate(pe.plan.coords):
+        state, _ = Executor(load_job(_raw(coord))).scaffold().run()
+        _assert_bitwise_equal(jax.tree.map(np.asarray, state["params"]),
+                              pe.lane_params(lane))
+
+
+def test_heterogeneous_async_campaign_bitwise_equals_single_runs():
+    """Async buckets: strategy x seed under FedBuff, lanes bitwise their
+    single runs (event scan + per-lane schedules under the bucket vmap)."""
+    sweep = {"strategy": ["fedavg", "fedprox"], "seeds": [7, 9]}
+    pe = PlanExecutor(
+        load_job(_raw({"seed": 7}, sweep=sweep, mode="async",
+                      chunk=2))).scaffold()
+    assert pe.S == 4 and len(pe.plan.buckets) == 2
+    pe.run()
+    for lane, coord in enumerate(pe.plan.coords):
+        state, _ = Executor(
+            load_job(_raw(coord, mode="async", chunk=2))).scaffold().run()
+        _assert_bitwise_equal(jax.tree.map(np.asarray, state["params"]),
+                              pe.lane_params(lane))
+
+
+def test_24_point_grid_compiles_exactly_4_programs(tmp_path):
+    """The tentpole claim: 24 trajectories, 4 signatures -> 4 compiled
+    programs (compile-count instrumentation), one merged table keyed by
+    (bucket, lane, sweep coords)."""
+    sweep = {"strategy": ["fedavg", "fedprox"],
+             "topology": ["client_server", "hierarchical"],
+             "seeds": [3, 5, 7], "client_lr": [0.05, 0.1]}
+    pe = PlanExecutor(load_job(_raw(sweep=sweep, rounds=1)),
+                      out_dir=str(tmp_path)).scaffold()
+    assert pe.S == 24 and len(pe.plan.buckets) == 4
+    pe.run()
+    assert pe.compiled_programs() == 4
+    rows = pe.rows()
+    assert len(rows) == 24
+    assert {"bucket", "lane", "strategy", "topology", "seed", "client_lr",
+            "traj", "round", "loss"} <= set(rows[0])
+    assert sorted(r["lane"] for r in rows) == list(range(24))
+    # the merged table round-trips through its CSV
+    got = read_results(tmp_path / "campaign.csv")
+    assert len(got) == 24
+    assert got[0]["strategy"] in ("fedavg", "fedprox")
+    header = (tmp_path / "campaign.csv").read_text().splitlines()[0]
+    assert header.startswith("bucket,lane,strategy,topology,seed,client_lr")
+    # cross-strategy curves group the merged table by strategy alone
+    from benchmarks.figures import strategy_comparison
+    curves = strategy_comparison(tmp_path / "campaign.csv")
+    assert {c["group"]["strategy"] for c in curves} == {"fedavg", "fedprox"}
+    assert all(len(c["rounds"]) == 1 for c in curves)
+
+
+def test_campaign_executor_rejects_heterogeneous_sweep():
+    raw = _raw(sweep={"strategy": ["fedavg", "fedprox"], "seeds": [3, 5]})
+    with pytest.raises(ValueError, match="PlanExecutor"):
+        CampaignExecutor(load_job(raw))
+
+
+# ---------------------------------------------------------------------------
+# lane scheduler: successive halving
+# ---------------------------------------------------------------------------
+
+def test_successive_halving_policy():
+    sh = SuccessiveHalving(metric="loss", rung_every=2, eta=2.0,
+                           min_lanes=1)
+    metrics = {0: 0.5, 1: 0.1, 2: 0.9, 3: 0.3}
+    assert sh.decide(1, metrics) == []            # off-rung
+    assert sorted(sh.decide(2, metrics)) == [0, 2]  # keep best half
+    assert sh.decide(2, {0: 0.5}) == []           # min_lanes floor
+    sh_max = SuccessiveHalving(metric="acc", mode="max", rung_every=1)
+    assert sorted(sh_max.decide(1, metrics)) == [1, 3]
+    with pytest.raises(ValueError, match="eta"):
+        SuccessiveHalving(eta=1.0)
+    # rung *crossing*: boundaries need not land exactly on a multiple
+    sh5 = SuccessiveHalving(rung_every=5)
+    assert not sh5.is_rung(4, prev_round=0)
+    assert sh5.is_rung(8, prev_round=4)       # rung 5 crossed in (4, 8]
+    assert not sh5.is_rung(8, prev_round=5)
+    assert sorted(sh5.decide(8, metrics, prev_round=4)) == [0, 2]
+
+
+def test_scheduled_checkpointed_campaign_requires_out_dir(tmp_path):
+    pe = PlanExecutor(load_job(_raw(sweep={"seeds": [3, 5]})),
+                      scheduler=SuccessiveHalving(),
+                      ckpt_dir=str(tmp_path / "ck"))
+    with pytest.raises(ValueError, match="out_dir"):
+        pe.scaffold()
+
+
+def test_halving_drops_lanes_and_freezes_their_state():
+    """4 seed lanes, halving every round over 3 rounds -> 1 survivor.
+    Dropped lanes freeze bitwise at their drop round (no recompilation:
+    still one compiled program); the survivor stays bitwise its full
+    single run; drops are ledger-recorded; dropped lanes stop contributing
+    rows beyond their drop round."""
+    sweep = {"seeds": [3, 5, 7, 9]}
+    raw = _raw(sweep=sweep, rounds=3, blockchain="hashchain")
+    pe = PlanExecutor(load_job(raw),
+                      scheduler=SuccessiveHalving(rung_every=1)).scaffold()
+    pe.run()
+    assert len(pe.dropped) == 3
+    survivors = [ln for ln in range(pe.S) if ln not in pe.dropped]
+    assert len(survivors) == 1
+    assert pe.compiled_programs() == 1            # drops never recompile
+
+    for lane, coord in enumerate(pe.plan.coords):
+        stop = pe.dropped.get(lane)               # None -> ran to the end
+        ex = Executor(load_job(_raw(coord, rounds=3))).scaffold()
+        state, _ = ex.run(rounds=stop)
+        _assert_bitwise_equal(jax.tree.map(np.asarray, state["params"]),
+                              pe.lane_params(lane))
+
+    # drop decisions are on the chain, with the deciding metric
+    drops = [b for b in pe.job.ledger.blocks() if b.kind == "lane_drop"]
+    assert len(drops) == 3 and pe.job.ledger.verify()
+    assert all("loss" in b.payload and "coord" in b.payload for b in drops)
+
+    # dropped lanes stop contributing rows beyond their drop round
+    for r in pe.rows():
+        stop = pe.dropped.get(r["lane"])
+        assert stop is None or r["round"] < stop
+
+
+def test_halving_resume_replays_chunk_boundary_decisions(tmp_path):
+    """Resume must reconstruct exactly the drops the live lockstep made:
+    with rung_every=1 but rounds_per_launch=2, decisions only happen at
+    chunk boundaries (rounds 2, 4), and a replay that evaluated every rung
+    round would drop different lanes from round-0 metrics."""
+    sweep = {"seeds": [3, 5, 7, 9]}
+
+    def mk():
+        raw = _raw(sweep=sweep, rounds=4, chunk=2)
+        raw["strategy"]["train_params"]["checkpoint_every"] = 2
+        return PlanExecutor(load_job(raw),
+                            scheduler=SuccessiveHalving(rung_every=1),
+                            ckpt_dir=str(tmp_path / "ckpt"),
+                            out_dir=str(tmp_path / "out"))
+
+    full = PlanExecutor(load_job(_raw(sweep=sweep, rounds=4, chunk=2)),
+                        scheduler=SuccessiveHalving(rung_every=1)).scaffold()
+    full.run()
+
+    pe1 = mk().scaffold()
+    pe1.run(rounds=2)                       # crash after the first boundary
+    pe2 = mk().scaffold()                   # resumes at round 2
+    assert pe2.round_idx == 2
+    assert pe2.dropped == {ln: r for ln, r in full.dropped.items() if r <= 2}
+    pe2.run()
+    assert pe2.dropped == full.dropped
+    for lane in range(full.S):
+        _assert_bitwise_equal(full.lane_params(lane), pe2.lane_params(lane))
+
+
+def test_unknown_scheduler_metric_fails_loudly():
+    """A typo'd metric must not silently disable halving — same no-silent-
+    typos contract as every other config surface."""
+    pe = PlanExecutor(load_job(_raw(sweep={"seeds": [3, 5]}, rounds=2)),
+                      scheduler=SuccessiveHalving(metric="los",
+                                                  rung_every=1)).scaffold()
+    with pytest.raises(KeyError, match="loss"):
+        pe.run()
+
+
+# ---------------------------------------------------------------------------
+# satellite: data-plane dedup
+# ---------------------------------------------------------------------------
+
+def test_scalar_only_sweep_stages_one_dataset():
+    """Lanes sharing the data-plane triple share ONE staged root: staged
+    bytes shrink vs the stacked staging, and the results stay bitwise
+    (asserted against single runs, the strongest form)."""
+    from repro.data.pipeline import stage_partitions_stacked
+
+    sweep = {"client_lr": [0.05, 0.1, 0.2, 0.4]}
+    camp = CampaignExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    assert camp.S == 4
+    np.testing.assert_array_equal(camp.lane_ds, [0, 0, 0, 0])
+    stacked = stage_partitions_stacked(camp.trajectories)
+    root_bytes = lambda st: st["x"].nbytes + st["y"].nbytes
+    assert root_bytes(camp.staged) * 4 == root_bytes(stacked)
+    camp.run()
+    for s, coord in enumerate(camp.spec.coords()):
+        state, _ = Executor(load_job(_raw(coord))).scaffold().run()
+        _assert_bitwise_equal(jax.tree.map(np.asarray, state["params"]),
+                              camp.trajectory_params(s))
+
+
+def test_mixed_sweep_dedups_per_distinct_data_plane():
+    sweep = {"seeds": [3, 5], "client_lr": [0.05, 0.1]}
+    camp = CampaignExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    # row-major: seed varies slowest -> lanes (0,1) share seed 3's root
+    np.testing.assert_array_equal(camp.lane_ds, [0, 0, 1, 1])
+    assert camp.staged["idx"].shape[0] == 4       # per-lane planes keep S
+
+
+# ---------------------------------------------------------------------------
+# satellite: append-only results table
+# ---------------------------------------------------------------------------
+
+def test_results_table_appends_instead_of_rewriting(tmp_path):
+    """5 chunks -> 1 header write + 4 appends, never a per-chunk rewrite;
+    the file stays byte-consistent with the in-memory rows."""
+    sweep = {"seeds": [3, 5]}
+    raw = _raw(sweep=sweep, rounds=5, chunk=1)
+    camp = CampaignExecutor(load_job(raw), out_dir=str(tmp_path)).scaffold()
+    camp.eval_fn = lambda params: {
+        "pnorm": float(sum(np.abs(np.asarray(t)).sum()
+                           for t in jax.tree.leaves(params)))}
+    camp.run()
+    assert camp._table.rewrites == 1
+    assert camp._table.appends == 4
+    got = read_results(tmp_path / "campaign.csv")
+    assert len(got) == len(camp.results) == 2 * 5
+    for g, r in zip(got, camp.results):
+        assert g["round"] == r["round"] and g["traj"] == r["traj"]
+        np.testing.assert_allclose(g["loss"], r["loss"], rtol=1e-6)
+        if "pnorm" in r:
+            np.testing.assert_allclose(g["pnorm"], r["pnorm"], rtol=1e-6)
+
+
+def test_resume_readopts_then_appends(tmp_path):
+    """A resumed campaign rewrites once (re-adopting the prior table) and
+    appends afterwards — the full-table O(S*R^2) behavior is gone."""
+    sweep = {"seeds": [3, 5]}
+
+    def mk(out):
+        raw = _raw(sweep=sweep, rounds=4, chunk=1)
+        raw["strategy"]["train_params"]["checkpoint_every"] = 2
+        return CampaignExecutor(load_job(raw), out_dir=str(out),
+                                ckpt_dir=str(tmp_path / "ckpt"))
+
+    ex = mk(tmp_path / "a").scaffold()
+    ex.run(rounds=2)
+    ex2 = mk(tmp_path / "a").scaffold()
+    assert ex2.round_idx == 2 and len(ex2.results) == 2 * 2
+    ex2.run()
+    # one rewrite (re-adopting rounds 0-1 + the round-2 chunk), then pure
+    # appends for the remaining chunk
+    assert ex2._table.rewrites == 1 and ex2._table.appends == 1
+    got = read_results(tmp_path / "a" / "campaign.csv")
+    assert sorted({r["round"] for r in got}) == [0, 1, 2, 3]
+    assert len(got) == 2 * 4
