@@ -409,6 +409,108 @@ def bench_plan(arch: str = "flsim-logreg", strategies=("fedavg", "fedprox"),
     return results
 
 
+def bench_shard(arch: str = "flsim-logreg", n_traj: int = 16,
+                n_devices: int = 4, n_clients: int = 8, rounds: int = 16,
+                chunk: int = 4, n_items: int = 512, seed: int = 0,
+                reps: int = 4, out_path: str = "BENCH_shard.json"):
+    """Trajectory-rounds/sec for a device-parallel campaign: the S=16 seed
+    grid sharded over a ``n_devices``-lane mesh vs the same campaign's
+    1-device vmap, on fake CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``;
+    ``benchmarks.run --only shard`` sets the flag itself when absent).
+
+    Both paths run the *same* compiled vmap program over the same S lanes —
+    the sharded one just places the leading sweep dim of every plane under a
+    ``NamedSharding`` over ``lanes``, so each device advances S/n lanes with
+    zero collectives. By the sharding determinism contract
+    (tests/test_shard_sweep.py) the two produce bitwise-identical per-lane
+    params, so the delta is pure device parallelism. The default grid is the
+    paper's scale-experiment model (logreg, Fig. 12) under the **async**
+    event scan: a long chain of small serial ops is exactly the program
+    shape one CPU device cannot thread (no big batched gemms for intra-op
+    parallelism to chew on), so concurrent per-device lane shards show the
+    cleanest win — while a model whose stacked working set is memory-bound
+    (the 1M-param MLP caveat bench_sweep documents) gains little on a
+    bandwidth-starved 2-core runner, since fake devices share one memory
+    bus. Timed regions interleave over ``reps`` repetitions and report each
+    mode's best (same noisy-runner rationale as bench_plan). Writes
+    ``out_path`` and prints one CSV row per mode.
+    """
+    import json
+
+    from repro.core.jobs import load_job
+    from repro.runtime.campaign import CampaignExecutor
+
+    if jax.device_count() < n_devices:
+        raise RuntimeError(
+            f"bench_shard wants {n_devices} devices but only "
+            f"{jax.device_count()} are visible; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
+            "before jax initializes (benchmarks.run --only shard does)")
+    assert rounds % chunk == 0, \
+        "rounds must be a multiple of chunk (keeps the timed region free " \
+        "of remainder-length compiles)"
+
+    raw = {
+        "name": "bench-shard",
+        "model": {"arch": arch},
+        "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                    "distribution": {"partition": "dirichlet",
+                                     "dirichlet_alpha": 0.5}},
+        "strategy": {"strategy": "fedavg",
+                     "train_params": {"n_clients": n_clients,
+                                      "local_epochs": 1,
+                                      "client_lr": 0.1,
+                                      "mode": "async", "async_buffer": 8,
+                                      "max_staleness": 8,
+                                      "staleness_exponent": 0.5,
+                                      "rounds": chunk + reps * rounds,
+                                      "seed": seed,
+                                      "rounds_per_launch": chunk}},
+        "runtime": {"straggler_prob": 0.1, "duration_sigma": 0.25},
+        "sweep": {"seeds": [seed + s for s in range(n_traj)]},
+    }
+    results = {"config": {"arch": arch, "n_traj": n_traj,
+                          "n_devices": n_devices, "n_clients": n_clients,
+                          "rounds": rounds, "chunk": chunk, "reps": reps,
+                          "n_items": n_items, "seed": seed,
+                          "backend": jax.default_backend(),
+                          "device_count": jax.device_count()},
+               "runs": {}}
+
+    vm = CampaignExecutor(load_job(raw)).scaffold()
+    sh = CampaignExecutor(load_job(raw), lane_devices=n_devices).scaffold()
+    vm.run(rounds=chunk)                     # warm-up: compile + stage
+    sh.run(rounds=chunk)
+    dt_vm = dt_sh = float("inf")
+    for rep in range(reps):
+        upto = chunk + (rep + 1) * rounds
+        t0 = time.time()
+        vm.run(rounds=upto)
+        dt_vm = min(dt_vm, time.time() - t0)
+        t0 = time.time()
+        sh.run(rounds=upto)
+        dt_sh = min(dt_sh, time.time() - t0)
+
+    traj_rounds = n_traj * rounds
+    for name, dt in (("vmapped_1dev", dt_vm), ("sharded", dt_sh)):
+        results["runs"][name] = {
+            "trajectories": n_traj, "rounds": rounds, "wall_s": dt,
+            "traj_rounds_per_s": traj_rounds / dt,
+            "s_per_traj_round": dt / traj_rounds}
+    speedup = dt_vm / dt_sh
+    results["speedup_sharded_vs_vmapped"] = speedup
+    for name in ("vmapped_1dev", "sharded"):
+        r = results["runs"][name]
+        print(f"shard_{name},{r['s_per_traj_round']*1e6:.0f},"
+              f"traj_rounds_per_s={r['traj_rounds_per_s']:.2f};"
+              f"speedup={speedup if name == 'sharded' else 1.0:.2f}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run_fl(fl: FLConfig, arch: str = "flsim-cnn", n_items: int = 768,
            rounds: int = 8, batch: int = 16, steps: int = 1,
            eval_n: int = 256, arch_cfg=None, run_name: str = "run"):

@@ -7,6 +7,7 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
 """
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -37,7 +38,24 @@ def main() -> None:
                     help="fewer rounds / smaller sizes")
     ap.add_argument("--only", default="all")
     args = ap.parse_args()
+    selected = (args.only != "all") and args.only.split(",")
+    if selected == ["shard"] and \
+            "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # the shard bench needs a multi-device host; on CPU that means
+        # forcing fake devices BEFORE jax initializes (imported below).
+        # The flag only multiplies the *cpu* platform, so pin the backend
+        # too or an accelerator host would ignore the forcing entirely.
+        # Only when shard is the SOLE selection: forcing would silently
+        # re-platform any co-selected bench onto fake CPU devices, so a
+        # mixed selection must bring its own environment (bench_shard's
+        # RuntimeError says how).
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=4"
+                                   ).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
     from benchmarks import figures, flbench
+    import jax
     q = args.quick
     jobs = {
         # --quick keeps the flsim_small config shape (the host-overhead
@@ -51,6 +69,17 @@ def main() -> None:
         # heterogeneous strategy x seed grid, bucketed-vmap vs sequential;
         # --quick keeps the grid (bucketing is the claim), cuts the rounds
         "plan": lambda: flbench.bench_plan(rounds=8 if q else 16),
+        # S=16 seed grid sharded over a 4-lane device mesh vs 1-device
+        # vmap; --quick keeps S and the mesh (the speedup is the claim).
+        # Selecting it explicitly forces 4 fake CPU devices (above) and
+        # fails hard if they still aren't there (preset XLA_FLAGS /
+        # JAX_PLATFORMS can defeat the forcing); only under the implicit
+        # "all" does a short host skip it, so the other benches still run.
+        "shard": lambda: (
+            flbench.bench_shard(rounds=8 if q else 16, reps=3 if q else 4)
+            if selected or jax.device_count() >= 4 else
+            print("shard,0,skipped: needs 4 devices — run `benchmarks.run "
+                  "--only shard` (it forces fake CPU devices itself)")),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),
@@ -61,7 +90,7 @@ def main() -> None:
             (100, 250, 500, 1000)),
         "roofline": roofline_table,
     }
-    only = list(jobs) if args.only == "all" else args.only.split(",")
+    only = selected or list(jobs)
     print("name,us_per_call,derived")
     for name in only:
         jobs[name]()

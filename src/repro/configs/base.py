@@ -241,19 +241,31 @@ class MeshConfig:
     data: int = 16
     model: int = 16
     pods: int = 2
+    # Device-parallel campaigns: the leading sweep-lane axis. Campaign lanes
+    # are embarrassingly parallel, so `lanes > 1` shards the (S,) sweep dim
+    # of every campaign plane over that many devices (launch/mesh.lane_mesh;
+    # runtime/campaign.py pads S up to a multiple with dead lanes). 1 keeps
+    # the single-device vmap.
+    lanes: int = 1
 
     @property
     def shape(self):
-        return (self.pods, self.data, self.model) if self.multi_pod else (self.data, self.model)
+        base = ((self.pods, self.data, self.model) if self.multi_pod
+                else (self.data, self.model))
+        return (self.lanes,) + base if self.lanes > 1 else base
 
     @property
     def axes(self):
-        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+        base = (("pod", "data", "model") if self.multi_pod
+                else ("data", "model"))
+        return ("lanes",) + base if self.lanes > 1 else base
 
     @property
     def n_chips(self) -> int:
         n = self.data * self.model
-        return n * self.pods if self.multi_pod else n
+        if self.multi_pod:
+            n *= self.pods
+        return n * self.lanes if self.lanes > 1 else n
 
 
 # ---------------------------------------------------------------------------

@@ -10,8 +10,11 @@ is what lets all S trajectories share ONE ``jax.vmap``-over-the-scan launch:
   staged tensors stack to a leading (S,) dim
   (``data/pipeline.stage_partitions_stacked``).
 - **schedule plane** (``staleness_exponent``): async only — the value
-  reshapes the host-precomputed event schedule (coefficients), which stacks
-  per trajectory like the data plane; the compiled event scan is unchanged.
+  reshapes the host-precomputed event schedule (coefficients). Schedules
+  dedup the way data roots do: lanes sharing (seed, partition, alpha,
+  staleness_exponent) share ONE (E,) schedule on device, and a per-lane
+  index maps lanes to the U unique rows; the compiled event scan is
+  unchanged.
 - **scalar plane** (``client_lr``, ``prox_mu``, ``server_lr``, ...): the
   value is threaded into the compiled round/event program as a *traced*
   per-trajectory scalar (``core/rounds.bind_hyper``), so one program serves

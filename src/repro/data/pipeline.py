@@ -97,7 +97,7 @@ def stage_partitions_stacked(trajectories):
 DEDUP_STAGED_AXES = {"x": None, "y": None, "idx": 0, "len": 0}
 
 
-def stage_partitions_dedup(trajectories, keys=None):
+def stage_partitions_dedup(trajectories, keys=None, mesh=None):
     """Stage S trajectories with the shared root datasets deduplicated.
 
     ``stage_partitions_stacked`` duplicates the root dataset S times even
@@ -117,6 +117,13 @@ def stage_partitions_dedup(trajectories, keys=None):
     introspection/tests; the indirection itself is baked into ``idx``).
     ``keys`` are optional hashable dedup keys per trajectory (the campaign
     passes its staging-cache keys); identity is the default.
+
+    ``mesh`` (a ``launch/mesh.lane_mesh``) places the staging for a
+    device-parallel campaign: the concatenated roots replicate on every
+    device, the per-lane ``idx``/``len`` planes shard their leading (S,)
+    dim over the ``lanes`` axis — exactly ``DEDUP_STAGED_AXES`` rendered
+    as a sharding. S must then be a multiple of the lane count (the
+    campaign pads with dead lanes before staging).
     """
     keys = list(keys) if keys is not None else [id(t) for t in trajectories]
     if len(keys) != len(trajectories):
@@ -142,9 +149,14 @@ def stage_partitions_dedup(trajectories, keys=None):
             for u, (_, _, parts) in enumerate(roots)]
     lens = [np.asarray([len(p) for p in parts], np.int32)
             for _, _, parts in roots]
-    staged = {"x": jnp.asarray(x_cat), "y": jnp.asarray(y_cat),
-              "idx": jnp.asarray(np.stack([pads[u] for u in lane_ds])),
-              "len": jnp.asarray(np.stack([lens[u] for u in lane_ds]))}
+    staged = {"x": x_cat, "y": y_cat,
+              "idx": np.stack([pads[u] for u in lane_ds]),
+              "len": np.stack([lens[u] for u in lane_ds])}
+    if mesh is not None:
+        from repro.launch.mesh import shard_lanes
+        staged = shard_lanes(staged, mesh, DEDUP_STAGED_AXES)
+    else:
+        staged = {k: jnp.asarray(v) for k, v in staged.items()}
     return staged, lane_ds
 
 

@@ -27,6 +27,20 @@ program as a runtime value alongside the scalar plane: a dropped lane's
 state freezes (``rounds.freeze_unless``) with **no recompilation**, its
 rows stop landing in the results table, and its ledger blocks stop.
 
+``lane_devices = n`` shards the sweep axis over an n-device lane mesh
+(``launch/mesh.lane_mesh``): lanes are embarrassingly parallel, so the
+leading (S,) dim of every plane — data ``idx``/``len``, schedules, scalars,
+alive mask, stacked model state — carries a
+``jax.sharding.NamedSharding`` over ``lanes`` while the concatenated data
+roots and unique schedules replicate, and the *same* compiled vmap program
+partitions into n zero-collective shards. S pads up to a multiple of n
+with dead lanes (``alive = 0`` from launch 1, so padding is the same
+maskwork as a scheduler drop — ``freeze_unless``, no recompilation) and
+padded lanes never reach the results table, the ledger, or eval. The
+schedule plane also dedups (satellite): async lanes sharing
+(seed, system model, staleness knobs) share ONE (E,) schedule on device,
+indexed per lane like the data roots.
+
 Determinism contract (tests/test_sweeps.py, tests/test_plan.py): lane ``s``
 of a campaign is **bitwise identical** to an independent single run of the
 s-th expanded config — threefry draws are vectorization-invariant (the same
@@ -61,6 +75,7 @@ from repro.core.jobs import make_dataset, make_fault
 from repro.core.plan import program_signature
 from repro.core.rounds import init_state
 from repro.data.pipeline import DEDUP_STAGED_AXES, stage_partitions_dedup
+from repro.launch.mesh import lane_mesh, shard_lanes
 from repro.runtime.executor import Executor
 
 _INT_COLS = ("seed", "traj", "round", "bucket", "lane", "async_buffer")
@@ -174,6 +189,12 @@ class CampaignExecutor(Executor):
     # mask (and its per-round state select) stays out of the program
     # entirely, so scheduler-off campaigns pay nothing for schedulability.
     lane_scheduling: bool = False
+    # Shard the sweep axis over this many devices (launch/mesh.lane_mesh);
+    # a configs.base.MeshConfig is also accepted (its `lanes` axis).
+    # 0 keeps the single-device vmap. S pads up to a multiple with dead
+    # lanes, which threads the alive mask even scheduler-off (the pad is
+    # maskwork, not recompilation).
+    lane_devices: int = 0
 
     def __post_init__(self):
         if self.job.sweep is None:
@@ -195,7 +216,23 @@ class CampaignExecutor(Executor):
                 f"{self.spec.categorical_names}) must go through the "
                 "planner: runtime.scheduler.PlanExecutor")
         self.S = len(self.fls)
-        self.alive = np.ones(self.S, np.float32)   # lane-scheduler mask
+        # a MeshConfig's `lanes` axis is an accepted spelling of the count;
+        # its lanes=1 default means "no lane axis" (matching its shape/axes
+        # properties), i.e. the single-device vmap, not a 1-device mesh
+        if hasattr(self.lane_devices, "lanes"):
+            self.lane_devices = (self.lane_devices.lanes
+                                 if self.lane_devices.lanes > 1 else 0)
+        self.lane_devices = int(self.lane_devices)
+        self.mesh = lane_mesh(self.lane_devices) if self.lane_devices else None
+        # pad S to a multiple of the device count with dead lanes (clones of
+        # the last config: zero extra staged bytes through the dedup caches)
+        d = max(self.lane_devices, 1)
+        self.S_pad = -(-self.S // d) * d
+        self._fls_pad = list(self.fls) + \
+            [self.fls[-1]] * (self.S_pad - self.S)
+        self.alive = np.ones(self.S_pad, np.float32)  # scheduler + pad mask
+        self.alive[self.S:] = 0.0                     # pad lanes never run
+        self._thread_alive = self.lane_scheduling or self.S_pad > self.S
         self._hyper_launch = None     # cached hyper+alive (device) dict
         self.results = []              # tidy rows: coords + traj/round/metrics
         self._tail_rows = []           # (lane, row) pairs, last round/lane
@@ -230,10 +267,12 @@ class CampaignExecutor(Executor):
         the concatenated roots, so every lane's gather stays bitwise a
         single run's). Also builds the scalar plane + per-trajectory roots.
         ``self.data`` is the list of per-trajectory (x, y, parts) host
-        views (eval_fn consumers index it by lane)."""
+        views (eval_fn consumers index it by lane). Under a lane mesh the
+        per-lane planes shard over ``lanes`` and the concatenated roots
+        replicate (``stage_partitions_dedup(mesh=...)``)."""
         cfg = getattr(self.job.model, "cfg", None)
         cache, trajs, keys = {}, [], []
-        for fl_s in self.fls:
+        for fl_s in self._fls_pad:
             k = (fl_s.seed, fl_s.partition, fl_s.dirichlet_alpha)
             if k not in cache:
                 ds = make_dataset(self.job.raw, fl_s, cfg)
@@ -243,16 +282,82 @@ class CampaignExecutor(Executor):
             keys.append(k)
         self.trajectories = trajs
         self.data = trajs
-        self.staged, self.lane_ds = stage_partitions_dedup(trajs, keys)
-        self.roots = sweeps.root_keys(self.fls)
-        self.hyper = sweeps.scalar_plane(self.fls)
+        self.staged, self.lane_ds = stage_partitions_dedup(
+            trajs, keys, mesh=self.mesh)
+        self.roots = shard_lanes(sweeps.root_keys(self._fls_pad), self.mesh)
+        self.hyper = shard_lanes(sweeps.scalar_plane(self._fls_pad),
+                                 self.mesh)
 
     def _init_state(self):
         fl = self.job.fl
-        self.state = jax.vmap(
+        self.state = shard_lanes(jax.vmap(
             lambda key: init_state(self.job.model, self.job.strategy, fl,
                                    key, n_clients_local=fl.n_clients))(
-            self.roots)
+            self.roots), self.mesh)
+
+    def _maybe_restore(self):
+        """Restore onto the live mesh — elastically: a checkpoint saves
+        full logical arrays with the *saving* process's padded lane dim,
+        and a different ``lane_devices`` at resume means a different
+        ``S_pad``. The real lanes are always the leading ``S`` rows, and
+        pad lanes are frozen at their initial state (``alive = 0`` from
+        launch 1) which the fresh scaffold just rebuilt bitwise — so
+        reconciliation is: keep the checkpoint's first S lanes, take the
+        new pad tail from the scaffolded template, then re-place on the
+        mesh. Saving on 4 devices and resuming on 1 (or vice versa) is
+        therefore bitwise the uninterrupted run (tests/test_shard_sweep.py
+        ::test_elastic_resume_across_device_counts)."""
+        if not self.ckpt_dir:
+            return
+        from repro.checkpoint import ckpt as ckpt_mod
+        last = ckpt_mod.latest_round(self.ckpt_dir)
+        if last is None:
+            return
+        template = self.state
+        restored, extra = ckpt_mod.restore(self.ckpt_dir, last, template)
+        saved_s = extra.get("campaign_lanes")
+        saved_grid = extra.get("campaign_grid")
+        if (saved_s is not None and saved_s != self.S) or \
+                (saved_grid is not None
+                 and saved_grid != self._coords_digest()):
+            raise ValueError(
+                f"checkpoint was written by a different sweep grid "
+                f"({saved_s} lanes, digest {saved_grid}) than this one "
+                f"({self.S} lanes, digest {self._coords_digest()}); a "
+                "resume needs the same grid (lane_devices may differ — "
+                "only the padding is elastic). Point ckpt_dir elsewhere "
+                "to start the new grid fresh")
+
+        def fit(saved, tmpl):
+            if saved.shape == tmpl.shape:
+                return saved
+            if saved.shape[1:] != tmpl.shape[1:] or saved.shape[0] < self.S:
+                raise ValueError(
+                    f"checkpoint leaf {saved.shape} does not fit campaign "
+                    f"state {tmpl.shape} (S={self.S}); the checkpoint was "
+                    "written by an incompatible campaign, not just a "
+                    "different lane_devices")
+            return jnp.concatenate([saved[:self.S], tmpl[self.S:]], 0)
+
+        self.state = shard_lanes(jax.tree.map(fit, restored, template),
+                                 self.mesh)
+        self.round_idx = extra["next_round"]
+
+    def _coords_digest(self) -> str:
+        """Stable digest of the expanded sweep coordinates — the identity
+        of the grid, not just its size (seeds [3,5] and [11,13] both have
+        S=2 but share no lane)."""
+        import hashlib
+        canon = repr([sorted(c.items()) for c in self.coords])
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    def _ckpt_extra(self) -> dict:
+        """The real (unpadded) lane count and the grid digest ride in the
+        manifest: restore rejects a checkpoint from a different sweep grid
+        instead of silently adopting lanes whose coordinates belong to
+        another campaign (padding alone stays elastic)."""
+        return dict(super()._ckpt_extra(), campaign_lanes=self.S,
+                    campaign_grid=self._coords_digest())
 
     def _post_restore(self):
         """Resume path: re-adopt the pre-restart rows (completed chunks are
@@ -269,33 +374,58 @@ class CampaignExecutor(Executor):
             self._table.reset()
 
     def _build_schedule(self, n_rounds: int):
-        """Per-trajectory virtual-clock schedules (seed and
-        staleness_exponent are sweepable), stacked to (S, E) on device."""
+        """Per-trajectory virtual-clock schedules, **deduplicated**: the
+        schedule is a pure function of (seed, partition, alpha — they fix
+        the fault stream and the weight vector — and staleness_exponent),
+        so lanes sharing that key share ONE (E,) schedule on device (the
+        ROADMAP schedule-plane item; async lanes swept only over scalar
+        knobs used to duplicate their schedules S times the way data used
+        to). ``sched_dev`` holds the U unique schedules stacked (U, E) —
+        replicated under a lane mesh — and ``lane_sched`` (S,) maps each
+        lane to its row; the event program gathers the row per lane, which
+        relocates identical bytes, so every lane's event stream is bitwise
+        its own single staging."""
         from repro.core.async_rounds import async_init_state
         from repro.runtime.clock import build_schedule
 
         fl = self.job.fl
-        lens = np.asarray(self.staged["len"], np.float32)   # (S, C)
-        self.schedules = [
-            build_schedule(
-                make_fault(self.job.raw, fl_s), fl.n_clients,
-                n_rounds * self.events_per_round, lens[s],
-                buffer_size=fl.async_buffer,
-                staleness_exponent=fl_s.staleness_exponent,
-                max_staleness=fl.max_staleness,
-                concurrency=fl.async_concurrency)
-            for s, fl_s in enumerate(self.fls)]
+        lens = np.asarray(self.staged["len"], np.float32)   # (S_pad, C)
+        cache, uniq, lane_u = {}, [], []
+        for s, fl_s in enumerate(self._fls_pad):
+            k = (fl_s.seed, fl_s.partition, fl_s.dirichlet_alpha,
+                 fl_s.staleness_exponent)
+            if k not in cache:
+                cache[k] = len(uniq)
+                uniq.append(build_schedule(
+                    make_fault(self.job.raw, fl_s), fl.n_clients,
+                    n_rounds * self.events_per_round, lens[s],
+                    buffer_size=fl.async_buffer,
+                    staleness_exponent=fl_s.staleness_exponent,
+                    max_staleness=fl.max_staleness,
+                    concurrency=fl.async_concurrency))
+            lane_u.append(cache[k])
+        self.schedules = [uniq[u] for u in lane_u]   # per-lane host views
         self.schedule = self.schedules[0]       # horizon checks read len()
-        devs = [s.device_arrays() for s in self.schedules]
-        self.sched_dev = {k: jnp.stack([d[k] for d in devs]) for k in devs[0]}
+        self.lane_sched = np.asarray(lane_u, np.int32)
+        devs = [sc.device_arrays() for sc in uniq]
+        sched = {k: jnp.stack([d[k] for d in devs]) for k in devs[0]}
+        self.sched_dev = shard_lanes(sched, self.mesh,
+                                     {k: None for k in sched})
+        self._lane_sched_dev = shard_lanes(jnp.asarray(self.lane_sched),
+                                           self.mesh)
         if "hist" not in self.state:
             ring = self.schedules[0].ring
-            self.state = jax.vmap(
-                lambda st: async_init_state(st, ring))(self.state)
+            self.state = shard_lanes(jax.vmap(
+                lambda st: async_init_state(st, ring))(self.state),
+                self.mesh)
 
     # -- compiled programs: the Executor's, under an outer vmap ------------
     # The concatenated roots (x, y) are NOT mapped over the sweep axis
-    # (DEDUP_STAGED_AXES): one device copy serves every lane.
+    # (DEDUP_STAGED_AXES): one device copy serves every lane. Neither are
+    # the unique (U, E) schedules — each lane gathers its row by lane_sched
+    # index. Under a lane mesh the mapped inputs arrive lanes-sharded, so
+    # the same jitted vmap partitions into per-device lane shards with no
+    # cross-device collectives.
     def _round_program(self, n_rounds: int):
         if n_rounds not in self._programs:
             def launch(s, staged, roots, hyper, start, n=n_rounds):
@@ -310,25 +440,30 @@ class CampaignExecutor(Executor):
     def _event_program(self, n_events: int):
         key = ("async", n_events)
         if key not in self._programs:
-            def launch(s, staged, sched, roots, hyper, start, n=n_events):
+            def launch(s, staged, sched, lane_u, roots, hyper, start,
+                       n=n_events):
                 return jax.vmap(
-                    lambda st, sg, sd, rt, hp:
-                    self._multi(self.ctx, st, sg, sd, rt, start, n, hp),
-                    in_axes=(0, DEDUP_STAGED_AXES, 0, 0, 0))(
-                    s, staged, sched, roots, hyper)
+                    lambda st, sg, sd, u, rt, hp:
+                    self._multi(self.ctx, st, sg,
+                                jax.tree.map(lambda t: t[u], sd), rt,
+                                start, n, hp),
+                    in_axes=(0, DEDUP_STAGED_AXES, None, 0, 0, 0))(
+                    s, staged, sched, lane_u, roots, hyper)
             self._programs[key] = jax.jit(launch)
         return self._programs[key]
 
     # -- chunk launches (the inherited _chunk_loop drives these) ----------
     def _launch_hyper(self):
-        """The scalar plane, plus — under a lane scheduler — the alive
-        mask as a runtime (S,) input, so drops never recompile. Cached
-        between launches; a drop invalidates it."""
-        if not self.lane_scheduling:
+        """The scalar plane, plus — under a lane scheduler, or whenever
+        device padding added dead lanes — the alive mask as a runtime
+        (S_pad,) input, so drops (and the padding itself) never recompile.
+        Cached between launches; a drop invalidates it."""
+        if not self._thread_alive:
             return self.hyper
         if self._hyper_launch is None:
-            self._hyper_launch = dict(self.hyper,
-                                      alive=jnp.asarray(self.alive))
+            self._hyper_launch = dict(
+                self.hyper,
+                alive=shard_lanes(jnp.asarray(self.alive), self.mesh))
         return self._hyper_launch
 
     def _skip_dead_bucket(self, n: int):
@@ -355,11 +490,11 @@ class CampaignExecutor(Executor):
         n_ev = n * epr
         t0 = time.time()
         state, metrics = self._event_program(n_ev)(
-            self.state, self.staged, self.sched_dev, self.roots,
-            self._launch_hyper(), start * epr)
+            self.state, self.staged, self.sched_dev, self._lane_sched_dev,
+            self.roots, self._launch_hyper(), start * epr)
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
-        ev = {k: np.asarray(v).reshape(self.S, n, epr)
+        ev = {k: np.asarray(v).reshape(self.S_pad, n, epr)
               for k, v in metrics.items()}
         stacked = {"loss": ev["loss"].mean(-1),
                    "staleness": ev["staleness"].mean(-1),

@@ -293,8 +293,12 @@ class Executor:
                 start // fl.checkpoint_every != \
                 self.round_idx // fl.checkpoint_every:
             ckpt_mod.save(self.ckpt_dir, self.round_idx, self.state,
-                          extra={"next_round": self.round_idx},
-                          async_write=False)
+                          extra=self._ckpt_extra(), async_write=False)
+
+    def _ckpt_extra(self) -> dict:
+        """Checkpoint manifest extras (campaigns add the lane count so a
+        resume against a different sweep grid fails loudly)."""
+        return {"next_round": self.round_idx}
 
     def _ledger_record(self, last: int):
         """Ledger hook at the chunk boundary (campaigns override: one block

@@ -111,6 +111,13 @@ class PlanExecutor:
     out_dir: Optional[str] = None
     ckpt_dir: Optional[str] = None
     eval_fn: Optional[Callable] = None
+    # Shard each bucket's sweep axis over this many devices (0 = no
+    # sharding). Buckets shard *independently* — each pads its own lane
+    # count up to a multiple of the device count with dead lanes — while
+    # scheduler decisions stay host-side, computed from the tidy table,
+    # whose rows are bitwise device-count-invariant: the same campaign
+    # drops the same lanes on 1 device and on n.
+    lane_devices: int = 0
 
     def scaffold(self):
         if self.job.sweep is None:
@@ -134,7 +141,8 @@ class PlanExecutor:
                 ckpt_dir=(str(pathlib.Path(self.ckpt_dir) / sub)
                           if self.ckpt_dir else None),
                 eval_fn=self.eval_fn, parquet=False,
-                lane_scheduling=self.scheduler is not None)
+                lane_scheduling=self.scheduler is not None,
+                lane_devices=self.lane_devices)
             ex.scaffold()
             self.execs.append(ex)
         # a crash can leave buckets at different rounds; the lockstep loop

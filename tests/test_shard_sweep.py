@@ -1,0 +1,282 @@
+"""Device-parallel campaign tests: the sweep axis sharded over a lane mesh.
+
+The sharding determinism contract extends the campaign contracts
+(tests/test_sweeps.py, tests/test_plan.py) along the *device* axis: lane
+``s`` of a campaign sharded over an n-device lane mesh is bitwise identical
+to the same campaign's 1-device vmap lane AND to an independent single run
+— for sync and async buckets, with and without a lane scheduler, and across
+chunkings. S that doesn't divide the device count pads with dead lanes
+(``alive = 0`` maskwork through ``rounds.freeze_unless``, the same select a
+scheduler drop uses), and padded lanes never reach the results table or the
+ledger.
+
+Needs a multi-device host: CI's ``multidevice`` job (and local runs) set
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` with
+``JAX_PLATFORMS=cpu`` before jax initializes; under the plain 1-device
+tier this module skips.
+"""
+import os
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.jobs import load_job
+from repro.runtime.campaign import CampaignExecutor
+from repro.runtime.executor import Executor
+from repro.runtime.scheduler import PlanExecutor, SuccessiveHalving
+
+DEVICES = 4
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < DEVICES,
+    reason=f"lane-mesh tests need {DEVICES} devices; run with "
+           f"XLA_FLAGS=--xla_force_host_platform_device_count={DEVICES} "
+           "(see CI's multidevice job)")
+
+
+def _raw(coord=None, sweep=None, *, mode="sync", rounds=3, chunk=3,
+         n_clients=4, n_items=96, strategy="fedavg"):
+    """One job dict; ``coord`` overrides land in their proper sections (the
+    single-run references for each campaign lane are built this way)."""
+    coord = coord or {}
+    tp = {"n_clients": n_clients, "local_epochs": 1,
+          "client_lr": coord.get("client_lr", 0.1),
+          "rounds": rounds, "seed": coord.get("seed", 3),
+          "rounds_per_launch": chunk}
+    runtime = {"straggler_prob": 0.2, "straggler_overprovision": 1.25}
+    if mode == "async":
+        tp.update({"mode": "async", "async_buffer": 3, "max_staleness": 4,
+                   "staleness_exponent": coord.get("staleness_exponent",
+                                                   0.5)})
+        runtime = {"straggler_prob": 0.2, "duration_sigma": 0.25}
+    raw = {
+        "name": "shard-test",
+        "model": {"arch": "flsim-logreg"},
+        "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                    "distribution": {
+                        "partition": "dirichlet",
+                        "dirichlet_alpha": coord.get("dirichlet_alpha",
+                                                     0.5)}},
+        "strategy": {"strategy": coord.get("strategy", strategy),
+                     "train_params": tp},
+        "runtime": runtime,
+    }
+    if sweep:
+        raw["sweep"] = sweep
+    return raw
+
+
+def _assert_bitwise_equal(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _lanes_match(sharded, vmapped, mk_raw):
+    """Every lane: sharded == 1-device vmap == independent single run."""
+    for s, coord in enumerate(sharded.spec.coords()):
+        _assert_bitwise_equal(vmapped.trajectory_params(s),
+                              sharded.trajectory_params(s))
+        state, _ = Executor(load_job(mk_raw(coord))).scaffold().run()
+        _assert_bitwise_equal(jax.tree.map(np.asarray, state["params"]),
+                              sharded.trajectory_params(s))
+
+
+# ---------------------------------------------------------------------------
+# the sharding determinism contract
+# ---------------------------------------------------------------------------
+
+def test_sharded_sync_campaign_bitwise():
+    """S=16 seeds x alpha x lr grid over 4 devices: every lane bitwise the
+    1-device vmap lane and its independent single run; the per-lane planes
+    actually shard while the concatenated data roots replicate."""
+    sweep = {"seeds": [3, 5, 7, 9], "dirichlet_alpha": [0.3, 3.0],
+             "client_lr": [0.05, 0.1]}
+    vm = CampaignExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    vm.run()
+    sh = CampaignExecutor(load_job(_raw(sweep=sweep)),
+                          lane_devices=DEVICES).scaffold()
+    sh.run()
+    assert sh.S == 16 and sh.S_pad == 16 and not sh._thread_alive
+    # placement: idx/len/scalars/state shard over lanes, roots replicate
+    assert len(sh.staged["idx"].sharding.device_set) == DEVICES
+    assert not sh.staged["idx"].sharding.is_fully_replicated
+    assert sh.staged["x"].sharding.is_fully_replicated
+    assert not jax.tree.leaves(
+        sh.state["params"])[0].sharding.is_fully_replicated
+    _lanes_match(sh, vm, _raw)
+
+
+def test_sharded_padding_is_dead_lane_maskwork():
+    """S=6 pads to 8 over 4 devices: real lanes stay bitwise their vmap /
+    single-run counterparts, pad lanes are alive=0 from launch 1 and never
+    reach the results table."""
+    sweep = {"seeds": [3, 5, 7], "client_lr": [0.05, 0.1]}
+    vm = CampaignExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    vm.run()
+    sh = CampaignExecutor(load_job(_raw(sweep=sweep)),
+                          lane_devices=DEVICES).scaffold()
+    sh.run()
+    assert sh.S == 6 and sh.S_pad == 8
+    assert sh._thread_alive          # padding threads the alive mask ...
+    assert not sh.lane_scheduling    # ... even with no scheduler attached
+    np.testing.assert_array_equal(sh.alive, [1, 1, 1, 1, 1, 1, 0, 0])
+    _lanes_match(sh, vm, _raw)
+    assert {r["traj"] for r in sh.results} == set(range(6))
+    assert len(sh.results) == 6 * 3
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_sharded_chunking_invariance(mode):
+    """rounds_per_launch chunking stays bitwise-invariant under the lane
+    mesh (uneven 2+1 chunking included) — chunk boundaries re-enter the
+    compiled program from host-visible sharded state."""
+    sweep = {"seeds": [3, 5], "client_lr": [0.05, 0.1]}
+    runs = {}
+    for chunk in (1, 3, 2):
+        camp = CampaignExecutor(
+            load_job(_raw(sweep=sweep, mode=mode, chunk=chunk)),
+            lane_devices=DEVICES).scaffold()
+        camp.run()
+        runs[chunk] = jax.tree.map(np.asarray, camp.state["params"])
+    _assert_bitwise_equal(runs[1], runs[3])
+    _assert_bitwise_equal(runs[1], runs[2])
+
+
+def test_sharded_async_campaign_bitwise():
+    """Async (FedBuff) lanes under the mesh: per-lane schedules dedup to
+    (U, E) replicated + a sharded lane->schedule index, and every lane is
+    bitwise its 1-device vmap lane and its single run."""
+    sweep = {"seeds": [7, 9], "staleness_exponent": [0.0, 1.0],
+             "client_lr": [0.05, 0.1]}
+    vm = CampaignExecutor(
+        load_job(_raw({"seed": 7}, sweep=sweep, mode="async",
+                      chunk=2))).scaffold()
+    vm.run()
+    sh = CampaignExecutor(
+        load_job(_raw({"seed": 7}, sweep=sweep, mode="async", chunk=2)),
+        lane_devices=DEVICES).scaffold()
+    sh.run()
+    assert sh.S == 8
+    # schedule plane: 2 seeds x 2 exponents = 4 unique schedules, 8 lanes
+    assert sh.sched_dev["client"].shape[0] == 4
+    np.testing.assert_array_equal(sh.lane_sched, [0, 0, 1, 1, 2, 2, 3, 3])
+    assert sh.sched_dev["client"].sharding.is_fully_replicated
+    _lanes_match(sh, vm, lambda c: _raw(c, mode="async", chunk=2))
+
+
+# ---------------------------------------------------------------------------
+# planner + scheduler under the mesh
+# ---------------------------------------------------------------------------
+
+def test_sharded_plan_scheduler_device_count_independent():
+    """A scheduled heterogeneous campaign drops the same lanes — and every
+    lane's params stay bitwise — whether the buckets run on 1 device or
+    sharded over 4: halving decisions are host-side functions of the tidy
+    table, whose rows regenerate identically under the mesh. Bucket sizes
+    (3 lanes each) don't divide the device count, so each bucket also pads
+    independently."""
+    sweep = {"strategy": ["fedavg", "fedprox"], "seeds": [3, 5, 7]}
+
+    def mk(lane_devices):
+        return PlanExecutor(load_job(_raw(sweep=sweep, rounds=3, chunk=1)),
+                            scheduler=SuccessiveHalving(rung_every=1,
+                                                        min_lanes=2),
+                            lane_devices=lane_devices).scaffold()
+
+    pe1 = mk(0)
+    pe1.run()
+    pe4 = mk(DEVICES)
+    assert all(ex.S == 3 and ex.S_pad == 4 for ex in pe4.execs)
+    pe4.run()
+    assert pe4.dropped == pe1.dropped and len(pe4.dropped) > 0
+    for lane in range(pe4.S):
+        _assert_bitwise_equal(pe1.lane_params(lane), pe4.lane_params(lane))
+
+
+def test_sharded_campaign_checkpoint_resume(tmp_path):
+    """Crash + resume under the mesh: the checkpoint stores full logical
+    arrays, the restore re-places them lane-sharded, and the resumed
+    trajectory is bitwise the uninterrupted one."""
+    sweep = {"seeds": [3, 5, 7, 9]}
+
+    def mk(out):
+        raw = _raw(sweep=sweep, rounds=4, chunk=2)
+        raw["strategy"]["train_params"]["checkpoint_every"] = 2
+        return CampaignExecutor(load_job(raw), out_dir=str(out),
+                                ckpt_dir=str(tmp_path / "ckpt"),
+                                lane_devices=DEVICES)
+
+    full = CampaignExecutor(load_job(_raw(sweep=sweep, rounds=4, chunk=2)),
+                            lane_devices=DEVICES).scaffold()
+    full.run()
+    ex = mk(tmp_path / "a").scaffold()
+    ex.run(rounds=2)                     # crash after the first chunk
+    ex2 = mk(tmp_path / "a").scaffold()  # resumes at round 2
+    assert ex2.round_idx == 2
+    assert not jax.tree.leaves(
+        ex2.state["params"])[0].sharding.is_fully_replicated
+    ex2.run()
+    _assert_bitwise_equal(jax.tree.map(np.asarray, full.state["params"]),
+                          jax.tree.map(np.asarray, ex2.state["params"]))
+
+
+def test_elastic_resume_across_device_counts(tmp_path):
+    """A checkpoint written under one lane_devices resumes under another:
+    the saved arrays carry the *saving* process's S_pad, the restore keeps
+    the S real lanes and re-pads from the fresh scaffold (pad lanes are
+    frozen at init, which the scaffold rebuilds bitwise) — so 4-device
+    save -> 1-device resume and the reverse both reproduce the
+    uninterrupted run exactly. S=6 makes the two pad sizes differ (8 vs
+    6)."""
+    sweep = {"seeds": [3, 5, 7], "client_lr": [0.05, 0.1]}
+
+    def mk(lane_devices, ck):
+        raw = _raw(sweep=sweep, rounds=4, chunk=2)
+        raw["strategy"]["train_params"]["checkpoint_every"] = 2
+        return CampaignExecutor(load_job(raw), ckpt_dir=str(ck),
+                                lane_devices=lane_devices)
+
+    full = CampaignExecutor(load_job(_raw(sweep=sweep, rounds=4,
+                                          chunk=2))).scaffold()
+    full.run()
+    for save_d, resume_d in ((DEVICES, 0), (0, DEVICES)):
+        ck = tmp_path / f"ck_{save_d}_{resume_d}"
+        ex = mk(save_d, ck).scaffold()
+        ex.run(rounds=2)                  # crash after the first chunk
+        ex2 = mk(resume_d, ck).scaffold()
+        assert ex2.round_idx == 2
+        assert jax.tree.leaves(ex2.state["params"])[0].shape[0] == ex2.S_pad
+        ex2.run()
+        for s in range(6):
+            _assert_bitwise_equal(full.trajectory_params(s),
+                                  ex2.trajectory_params(s))
+
+
+def test_mesh_config_lanes_axis():
+    """configs.base.MeshConfig carries the lane axis: lane_mesh accepts it
+    directly, and so does CampaignExecutor(lane_devices=...)."""
+    from repro.configs.base import MeshConfig
+    from repro.launch.mesh import lane_mesh
+
+    cfg = MeshConfig(lanes=DEVICES)
+    assert cfg.axes[0] == "lanes" and cfg.shape[0] == DEVICES
+    assert cfg.n_chips == DEVICES * MeshConfig().n_chips
+    mesh = lane_mesh(cfg)
+    assert mesh.axis_names == ("lanes",) and mesh.devices.shape == (DEVICES,)
+    camp = CampaignExecutor(load_job(_raw(sweep={"seeds": [3, 5]})),
+                            lane_devices=cfg)
+    assert camp.lane_devices == DEVICES and camp.mesh is not None
+    # the default MeshConfig (lanes=1, no lane axis in shape/axes) means
+    # the single-device vmap, not a 1-device mesh
+    off = CampaignExecutor(load_job(_raw(sweep={"seeds": [3, 5]})),
+                           lane_devices=MeshConfig())
+    assert off.lane_devices == 0 and off.mesh is None
+
+
+def test_lane_mesh_wants_visible_devices():
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        from repro.launch.mesh import lane_mesh
+        lane_mesh(jax.device_count() + 1)

@@ -121,6 +121,39 @@ def test_chunked_equals_unchunked_under_sweep(mode):
     _assert_bitwise_equal(runs[1], runs[2])
 
 
+def test_async_schedule_plane_dedup_bitwise():
+    """Scalar-only async sweeps used to duplicate the (E,) event schedule S
+    times the way data used to be duplicated (the ROADMAP schedule-plane
+    item): lanes sharing (seed, partition, alpha, staleness_exponent) must
+    share ONE schedule on device — and stay bitwise their single runs (the
+    strongest form of "dedup changed nothing")."""
+    sweep = {"client_lr": [0.05, 0.1, 0.2]}
+    camp = CampaignExecutor(
+        load_job(_raw(sweep=sweep, mode="async", chunk=2))).scaffold()
+    assert camp.S == 3
+    # one unique schedule serves all three lanes
+    assert camp.sched_dev["client"].shape[0] == 1
+    np.testing.assert_array_equal(camp.lane_sched, [0, 0, 0])
+    assert camp.schedules[0] is camp.schedules[2]
+    camp.run()
+    _assert_lanes_match_singles(
+        camp, lambda c: _raw(c, mode="async", chunk=2))
+
+
+def test_async_schedule_plane_dedup_keys():
+    """Mixed sweep: the schedule dedups per distinct (seed,
+    staleness_exponent) while the swept lr rides along — U=4 schedules for
+    S=8 lanes, keyed row-major like the data plane."""
+    sweep = {"seeds": [7, 9], "staleness_exponent": [0.0, 1.0],
+             "client_lr": [0.05, 0.1]}
+    camp = CampaignExecutor(
+        load_job(_raw({"seed": 7}, sweep=sweep, mode="async",
+                      chunk=2))).scaffold()
+    assert camp.S == 8
+    assert camp.sched_dev["client"].shape[0] == 4
+    np.testing.assert_array_equal(camp.lane_sched, [0, 0, 1, 1, 2, 2, 3, 3])
+
+
 # ---------------------------------------------------------------------------
 # sweep expansion / config surface
 # ---------------------------------------------------------------------------
@@ -181,6 +214,26 @@ def test_campaign_resume_keeps_full_results_table(tmp_path):
     assert len(ex2.results) == 2 * 4
     _assert_bitwise_equal(jax.tree.map(np.asarray, full.state["params"]),
                           jax.tree.map(np.asarray, ex2.state["params"]))
+
+
+def test_campaign_resume_rejects_changed_grid(tmp_path):
+    """A checkpoint records the campaign's real lane count: resuming with a
+    different sweep grid must fail loudly instead of silently adopting
+    lane states whose coordinates belong to the old grid (only the device
+    padding is elastic)."""
+
+    def mk(sweep):
+        raw = _raw(sweep=sweep, chunk=2)
+        raw["strategy"]["train_params"]["rounds"] = 4
+        raw["strategy"]["train_params"]["checkpoint_every"] = 2
+        return CampaignExecutor(load_job(raw),
+                                ckpt_dir=str(tmp_path / "ckpt"))
+
+    mk({"seeds": [3, 5, 7, 9]}).scaffold().run(rounds=2)
+    with pytest.raises(ValueError, match="different sweep grid"):
+        mk({"seeds": [3, 5]}).scaffold()          # fewer lanes
+    with pytest.raises(ValueError, match="different sweep grid"):
+        mk({"seeds": [11, 13, 17, 19]}).scaffold()  # same S, other coords
 
 
 def test_campaign_curves_grouping_immune_to_eval_columns():
