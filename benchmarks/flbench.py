@@ -511,6 +511,81 @@ def bench_shard(arch: str = "flsim-logreg", n_traj: int = 16,
     return results
 
 
+def bench_agg(n_params: int = 1 << 20, n_clients: int = 16,
+              qblock: int = 256, reps: int = 30, seed: int = 0,
+              out_path: str = "BENCH_agg.json"):
+    """Fused int8 aggregation vs dequant-first, at the memory-bound
+    1M-param MLP scale the sweep bench flagged (bench_sweep's docstring
+    caveat: at that size a round is HBM-traffic-, not compute-, dominated —
+    exactly the regime where reading each client byte once matters).
+
+    One server reduce over C client sends in the kernel's packed layout
+    ((C, N) int8 + (C, N/qblock) f32 scales — what ``compression: int8``
+    runs actually aggregate every round/flush):
+
+    - ``fused``         — ``ops._quant_agg_fused``: the unrolled
+      dequant+weighted-sum XLA compiles to one pass; the (C, N) f32
+      dequant never exists in memory.
+    - ``dequant_first`` — ``ops._quant_agg_dequant_first``: materializes
+      the full f32 dequant behind an ``optimization_barrier`` (identity on
+      values, so the two are asserted bitwise equal here) before the same
+      accumulation — the naive path's 4x write + 4x read-back traffic.
+
+    Timed regions interleave over ``reps`` and report best-of (same noisy
+    shared-runner rationale as bench_plan). Writes ``out_path`` with
+    ``speedup_fused_vs_dequant`` — the bench gate's BENCH_agg contract
+    (>= 1.5x) reads it.
+    """
+    import json
+
+    from repro.kernels import ops
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    n = n_params + (-n_params) % qblock
+    qd = jax.random.randint(ks[0], (n_clients, n), -127, 128, jnp.int8)
+    sc = jax.random.uniform(ks[1], (n_clients, n // qblock), jnp.float32,
+                            1e-4, 1e-2)
+    w = jax.random.uniform(ks[2], (n_clients,), jnp.float32)
+    w = w / w.sum()
+
+    fused = jax.jit(ops._quant_agg_fused)
+    dequant = jax.jit(ops._quant_agg_dequant_first)
+    a = jax.block_until_ready(fused(qd, sc, w))        # warm-up + compile
+    b = jax.block_until_ready(dequant(qd, sc, w))
+    assert (np.asarray(a) == np.asarray(b)).all(), \
+        "fused and dequant-first paths diverged (bitwise contract)"
+
+    dt = {"fused": float("inf"), "dequant_first": float("inf")}
+    for _ in range(reps):
+        for name, fn in (("fused", fused), ("dequant_first", dequant)):
+            t0 = time.time()
+            jax.block_until_ready(fn(qd, sc, w))
+            dt[name] = min(dt[name], time.time() - t0)
+
+    int8_mb = qd.size * 1 / 2**20
+    results = {"config": {"n_params": n_params, "n_clients": n_clients,
+                          "qblock": qblock, "reps": reps, "seed": seed,
+                          "backend": jax.default_backend(),
+                          "kernel_impl": ops.backend()},
+               "runs": {}, "bitwise_equal": True}
+    for name in ("fused", "dequant_first"):
+        results["runs"][name] = {
+            "best_s": dt[name],
+            "agg_per_s": 1.0 / dt[name],
+            "int8_GiBps": int8_mb / 1024 / dt[name]}
+    speedup = dt["dequant_first"] / dt["fused"]
+    results["speedup_fused_vs_dequant"] = speedup
+    for name in ("fused", "dequant_first"):
+        r = results["runs"][name]
+        print(f"agg_{name},{r['best_s']*1e6:.0f},"
+              f"int8_GiBps={r['int8_GiBps']:.2f};"
+              f"speedup={speedup if name == 'fused' else 1.0:.2f}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run_fl(fl: FLConfig, arch: str = "flsim-cnn", n_items: int = 768,
            rounds: int = 8, batch: int = 16, steps: int = 1,
            eval_n: int = 256, arch_cfg=None, run_name: str = "run"):

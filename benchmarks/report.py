@@ -28,6 +28,8 @@ BENCH_CONTRACTS = {
                    lambda r: r["speedup_bucketed_vs_sequential"]),
     "BENCH_shard": (1.5, "4-device lane-sharded campaign vs 1-device vmap",
                     lambda r: r["speedup_sharded_vs_vmapped"]),
+    "BENCH_agg": (1.5, "fused int8 aggregation vs dequant-first",
+                  lambda r: r["speedup_fused_vs_dequant"]),
 }
 
 

@@ -80,6 +80,10 @@ def main() -> None:
             if selected or jax.device_count() >= 4 else
             print("shard,0,skipped: needs 4 devices — run `benchmarks.run "
                   "--only shard` (it forces fake CPU devices itself)")),
+        # fused int8 dequant+weighted-sum vs dequant-first materialize at
+        # the memory-bound 1M-param scale; --quick keeps the shape (the
+        # traffic ratio is the claim) and only cuts the timed reps
+        "agg": lambda: flbench.bench_agg(reps=10 if q else 30),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

@@ -232,7 +232,7 @@ SWEEPABLE_SCALARS = ("seed", "client_lr", "server_lr", "server_momentum",
 # instead — a heterogeneous grid compiles one program per bucket, not one
 # per trajectory.
 SWEEPABLE_CATEGORICAL = ("strategy", "topology", "placement", "mode",
-                         "async_buffer")
+                         "async_buffer", "compression")
 
 
 @dataclass(frozen=True)

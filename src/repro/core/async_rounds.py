@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core import determinism
+from repro.core import determinism, packing
 from repro.core.rounds import bind_hyper, freeze_unless, local_train, \
     pop_alive
 from repro.core.strategy import Strategy, tree_add, tree_scale, tree_zeros_like
@@ -47,18 +47,37 @@ from repro.data.pipeline import gather_one_client_batch
 from repro.sharding.axes import AxisCtx
 
 
-def async_init_state(state: dict, ring: int) -> dict:
+def async_init_state(state: dict, ring: int, fl: FLConfig = None,
+                     strategy: Strategy = None) -> dict:
     """Augment a sync init_state with the async carries.
 
     ``hist`` is the param-version ring (every slot starts at version 0, so
     staleness-0 reads are exact); ``acc`` is the open buffer accumulator
     (carried across launch boundaries so chunking can split a buffer group
     without changing the trajectory).
+
+    When ``(fl, strategy)`` select the packed int8 path under FedBuff, the
+    open buffer is carried *quantized*: ``qbuf``/``sbuf`` hold the K pending
+    client sends in the kernel's (K, N) int8 + (K, N/b) scale layout,
+    ``cbuf`` their staleness coefficients and ``bufn`` the count of accepted
+    arrivals in the open group. The flush is then ONE fused
+    dequant+weighted-sum instead of K incremental f32 adds — and the carries
+    keep chunked == unchunked bitwise, same as ``acc``.
     """
     params = state["params"]
     hist = jax.tree.map(lambda t: jnp.repeat(t[None], ring, axis=0), params)
     acc = jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), params)
-    return dict(state, hist=hist, acc=acc)
+    out = dict(state, hist=hist, acc=acc)
+    if (fl is not None and strategy is not None
+            and getattr(strategy, "packs_deltas", False)
+            and max(fl.async_buffer, 1) > 1):
+        n, nblocks = packing.packed_size(params)
+        k = fl.async_buffer
+        out["qbuf"] = jnp.zeros((k, n), jnp.int8)
+        out["sbuf"] = jnp.zeros((k, nblocks), jnp.float32)
+        out["cbuf"] = jnp.zeros((k,), jnp.float32)
+        out["bufn"] = jnp.zeros((), jnp.int32)
+    return out
 
 
 def build_async_multi(model, strategy: Strategy, fl: FLConfig,
@@ -77,6 +96,7 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
     batch_size = batch_size or fl.batch_size
     steps = max(fl.local_steps, 1)
     fedbuff = max(fl.async_buffer, 1) > 1
+    packed = strategy.packs_deltas
 
     def multi_fn(ctx: AxisCtx, state, staged, sched, root, start_event,
                  n_events: int, hyper=None):
@@ -95,33 +115,89 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
                                              steps)
             key = determinism.client_key(rkey, c)
             delta, _, loss = local_train(model, ctx, strategy_h, fl_h, stale,
-                                         server, (), cbatch, key)
-            if fedbuff:
-                contrib = tree_scale(delta, ev["coeff"])
+                                         server, (), cbatch, key,
+                                         pack_deltas=packed)
+            if packed and fedbuff:
+                # the open group is buffered *quantized* in the kernel's
+                # (K, N) layout; a rejected arrival keeps its slot's old row
+                # (accept — not coeff, which is 0 for accepted zero-weight
+                # clients too — gates the write and the count)
+                from repro.kernels import ops
+                accept = ev["accept"]
+                slot = st["bufn"]
+                qbuf = st["qbuf"].at[slot].set(
+                    jnp.where(accept, delta.q, st["qbuf"][slot]))
+                sbuf = st["sbuf"].at[slot].set(
+                    jnp.where(accept, delta.scale, st["sbuf"][slot]))
+                cbuf = st["cbuf"].at[slot].set(
+                    jnp.where(accept, ev["coeff"], st["cbuf"][slot]))
+                bufn = st["bufn"] + accept.astype(jnp.int32)
+
+                def do_apply(op):
+                    params, server, hist, qbuf, sbuf, cbuf, bufn = op
+                    # the FedBuff flush: ONE fused dequant+weighted-sum
+                    # over the K buffered int8 sends
+                    agg_flat = ops.quant_aggregate(qbuf, sbuf, cbuf)
+                    agg = jax.tree.map(
+                        lambda a, p: a.astype(p.dtype),
+                        packing.unpack_tree(agg_flat, params), params)
+                    new_p, new_s = strategy_h.server_update(params, agg,
+                                                            server)
+                    hist = jax.tree.map(
+                        lambda h, p: h.at[ev["write_slot"]].set(p), hist,
+                        new_p)
+                    return (new_p, new_s, hist, jnp.zeros_like(qbuf),
+                            jnp.zeros_like(sbuf), jnp.zeros_like(cbuf),
+                            jnp.zeros_like(bufn))
+
+                params, server, hist, qbuf, sbuf, cbuf, bufn = jax.lax.cond(
+                    ev["apply"], do_apply, lambda op: op,
+                    (params, server, hist, qbuf, sbuf, cbuf, bufn))
+                new_st = dict(st, params=params, server=server, hist=hist,
+                              qbuf=qbuf, sbuf=sbuf, cbuf=cbuf, bufn=bufn)
             else:
-                # FedAsync mixing form: alpha * (client_model - server)
-                # == alpha * ((stale - params) + delta); the drift term
-                # pulls the server toward the client's (stale) start point.
-                contrib = jax.tree.map(
-                    lambda s_, p, d: ev["coeff"]
-                    * ((s_.astype(jnp.float32) - p.astype(jnp.float32)) + d),
-                    stale, params, delta)
-            acc = tree_add(acc, contrib)
+                if packed:
+                    # packed FedAsync: the event's single int8 send is
+                    # dequantized+coeff-scaled by the fused kernel (C == 1)
+                    from repro.kernels import ops
+                    deq = ops.quant_aggregate(delta.q[None],
+                                              delta.scale[None],
+                                              ev["coeff"][None])
+                    contrib = jax.tree.map(
+                        lambda s_, p, d: ev["coeff"]
+                        * (s_.astype(jnp.float32) - p.astype(jnp.float32))
+                        + d,
+                        stale, params, packing.unpack_tree(deq, params))
+                elif fedbuff:
+                    contrib = tree_scale(delta, ev["coeff"])
+                else:
+                    # FedAsync mixing form: alpha * (client_model - server)
+                    # == alpha * ((stale - params) + delta); the drift term
+                    # pulls the server toward the client's (stale) start
+                    # point.
+                    contrib = jax.tree.map(
+                        lambda s_, p, d: ev["coeff"]
+                        * ((s_.astype(jnp.float32) - p.astype(jnp.float32))
+                           + d),
+                        stale, params, delta)
+                acc = tree_add(acc, contrib)
 
-            def do_apply(op):
-                params, server, acc, hist = op
-                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), acc,
-                                   params)
-                new_p, new_s = strategy_h.server_update(params, agg, server)
-                hist = jax.tree.map(
-                    lambda h, p: h.at[ev["write_slot"]].set(p), hist, new_p)
-                return new_p, new_s, tree_zeros_like(acc), hist
+                def do_apply(op):
+                    params, server, acc, hist = op
+                    agg = jax.tree.map(lambda a, p: a.astype(p.dtype), acc,
+                                       params)
+                    new_p, new_s = strategy_h.server_update(params, agg,
+                                                            server)
+                    hist = jax.tree.map(
+                        lambda h, p: h.at[ev["write_slot"]].set(p), hist,
+                        new_p)
+                    return new_p, new_s, tree_zeros_like(acc), hist
 
-            params, server, acc, hist = jax.lax.cond(
-                ev["apply"], do_apply, lambda op: op,
-                (params, server, acc, hist))
-            new_st = dict(st, params=params, server=server, hist=hist,
-                          acc=acc)
+                params, server, acc, hist = jax.lax.cond(
+                    ev["apply"], do_apply, lambda op: op,
+                    (params, server, acc, hist))
+                new_st = dict(st, params=params, server=server, hist=hist,
+                              acc=acc)
             if alive is not None:
                 new_st = freeze_unless(alive, new_st, st)
             metrics = {"loss": loss,

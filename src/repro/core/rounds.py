@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SWEEPABLE_SCALARS, FLConfig, ModelConfig
-from repro.core import determinism
+from repro.core import determinism, packing
 from repro.core.consensus import MultiWorkerAggregator
 from repro.core.strategy import (Strategy, client_sgd_step, tree_add,
                                  tree_scale, tree_sub, tree_zeros_like)
@@ -84,10 +84,15 @@ def freeze_unless(alive, new_state, old_state):
 
 def local_train(model, model_ctx: AxisCtx, strategy: Strategy, fl: FLConfig,
                 global_params, server_state, client_state, batches, rng,
-                gather_fn=lambda b: b, grad_sync=lambda g: g):
+                gather_fn=lambda b: b, grad_sync=lambda g: g,
+                pack_deltas: bool = False):
     """Run E local epochs over ``batches`` (leading dim = steps).
 
-    Returns (delta, new_client_state, mean_loss)."""
+    Returns (delta, new_client_state, mean_loss). With ``pack_deltas`` the
+    delta leaves the client as a ``packing.PackedDelta`` (int8 + block
+    scales, via ``Strategy.postprocess_packed``) — what actually crosses the
+    simulated network on the compressed path."""
+    post = strategy.postprocess_packed if pack_deltas else strategy.postprocess
     n_steps = jax.tree.leaves(batches)[0].shape[0]
     use_mom = fl.client_optimizer == "sgdm" and fl.client_momentum > 0
     mom0 = tree_zeros_like(global_params) if use_mom else None
@@ -111,7 +116,7 @@ def local_train(model, model_ctx: AxisCtx, strategy: Strategy, fl: FLConfig,
         delta = jax.tree.map(
             lambda p, g: (-fl.client_lr * g).astype(p.dtype),
             global_params, grads)
-        delta, client_state = strategy.postprocess(delta, client_state, rng)
+        delta, client_state = post(delta, client_state, rng)
         client_state = strategy.client_state_update(
             client_state, server_state, delta, 1, fl.client_lr)
         return delta, client_state, loss
@@ -137,10 +142,39 @@ def local_train(model, model_ctx: AxisCtx, strategy: Strategy, fl: FLConfig,
     (params, _), losses = jax.lax.scan(
         one_step, (global_params, mom0), (jnp.arange(total), keys))
     delta = tree_sub(params, global_params)
-    delta, client_state = strategy.postprocess(delta, client_state, rng)
+    delta, client_state = post(delta, client_state, rng)
     client_state = strategy.client_state_update(
         client_state, server_state, delta, total, fl.client_lr)
     return delta, client_state, losses.mean()
+
+
+# ---------------------------------------------------------------------------
+# Packed (int8) server-side aggregation
+# ---------------------------------------------------------------------------
+
+def packed_aggregate(topo, ctx: AxisCtx, pd, weights):
+    """Weighted mean of stacked ``PackedDelta``s ((C, N) int8 + (C, N/b)
+    scales) through the fused dequant+weighted-sum kernel, following the
+    topology's reduction plan: each int8 byte is read once and only the
+    (N,) f32 numerator crosses the mesh. Returns the flat f32 aggregate."""
+    from repro.kernels import ops
+    from repro.core.topology import Hierarchical
+    num = ops.quant_aggregate(pd.q, pd.scale, weights)
+    den = weights.sum()
+    if isinstance(topo, Hierarchical):
+        intra = tuple(a for a in (ctx.data, ctx.model) if a)
+        if intra:      # edge tier
+            num = jax.lax.psum(num, intra)
+            den = jax.lax.psum(den, intra)
+        agg = num / jnp.maximum(den, 1e-12)
+        if ctx.pod:    # cloud tier
+            agg = jax.lax.pmean(agg, ctx.pod)
+        return agg
+    axes = tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a)
+    if axes:
+        num = jax.lax.psum(num, axes)
+        den = jax.lax.psum(den, axes)
+    return num / jnp.maximum(den, 1e-12)
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +192,9 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
                                 fl.consensus)
           if (fl.n_workers > 1 or fl.byzantine_workers > 0) else None)
     inner = AxisCtx()   # the model runs unsharded inside each client
+    # gossip mixing has no server-side reduce to fuse into — the packed
+    # path is the client->server topologies' (ROADMAP: gossip follow-on)
+    packed = strategy.packs_deltas and not decentralized
 
     def round_fn(ctx: AxisCtx, state, batch, weights, rng, hyper=None):
         """batch: (C_loc, steps, B_c, ...); weights: (C_loc,)."""
@@ -174,7 +211,8 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
 
         def per_client(cbatch, cstate, key, start_params):
             return local_train(model, inner, strategy_h, fl_h, start_params,
-                               server_state, cstate, cbatch, key)
+                               server_state, cstate, cbatch, key,
+                               pack_deltas=packed)
 
         if decentralized:
             deltas, cstates, losses = jax.vmap(per_client)(
@@ -187,7 +225,11 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
             deltas, cstates, losses = jax.vmap(
                 per_client, in_axes=(0, 0, 0, None))(
                 batch, state["clients"], keys, params)
-            agg = topo.aggregate(ctx, deltas, weights)
+            if packed:
+                agg_flat = packed_aggregate(topo, ctx, deltas, weights)
+                agg = packing.unpack_tree(agg_flat, params)
+            else:
+                agg = topo.aggregate(ctx, deltas, weights)
             if mw is not None:
                 agg = mw.run(agg, rng)
             agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
@@ -236,6 +278,7 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
     mw = (MultiWorkerAggregator(fl.n_workers, fl.byzantine_workers,
                                 fl.consensus)
           if (fl.n_workers > 1 or fl.byzantine_workers > 0) else None)
+    packed = strategy.packs_deltas
 
     def round_fn(ctx: AxisCtx, state, batch, weights, rng, hyper=None):
         fl_h, strategy_h = bind_hyper(fl, strategy, hyper)
@@ -257,7 +300,32 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
                 delta, w / jnp.maximum(weights.sum(), 1e-12)))
             return acc, loss_acc + loss / C_t
 
-        if C_t == 1:
+        def client_packed(i):
+            cbatch = jax.tree.map(lambda t: t[i], batch)
+            key = determinism.client_key(rng, i)
+            pd, _, loss = local_train(
+                model, ctx, strategy_h, fl_h, params, server_state, (),
+                cbatch, key, gather_fn, grad_sync, pack_deltas=True)
+            return pd, loss
+
+        if packed:
+            # clients still run one at a time (lax.map scans), but their
+            # int8 sends are stacked to the kernel's (C_t, N) layout and
+            # reduced in ONE fused dequant+weighted-sum
+            if C_t == 1:
+                pd, loss = client_packed(0)
+                pds = jax.tree.map(lambda t: t[None], pd)
+                w = jnp.ones((1,), jnp.float32)   # C_t==1 applies raw delta
+            else:
+                pds, losses = jax.lax.map(client_packed, jnp.arange(C_t))
+                loss = losses.sum() / C_t
+                w = weights / jnp.maximum(weights.sum(), 1e-12)
+            from repro.kernels import ops
+            agg_flat = ops.quant_aggregate(pds.q, pds.scale, w)
+            agg = jax.tree.map(
+                lambda a, p: a.astype(p.dtype),
+                packing.unpack_tree(agg_flat, params), params)
+        elif C_t == 1:
             cbatch = jax.tree.map(lambda t: t[0], batch)
             key = determinism.client_key(rng, 0)
             agg, _, loss = local_train(

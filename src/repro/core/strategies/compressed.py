@@ -9,6 +9,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.strategy import Strategy
 from repro.kernels import ref as kref
 
@@ -23,10 +24,15 @@ def _roundtrip_int8(x, block=256):
 
 
 def _topk_mask(x, ratio):
+    """Exactly-k sparsification mask. A threshold compare would keep every
+    element tied at the k-th magnitude (so the effective k — and the bytes
+    on the wire — could exceed ratio*N); scattering top_k's indices keeps
+    precisely k, ties broken deterministically by flat index order."""
     flat = jnp.abs(x.astype(jnp.float32)).reshape(-1)
     k = max(1, int(flat.shape[0] * ratio))
-    thresh = jax.lax.top_k(flat, k)[0][-1]
-    return (jnp.abs(x) >= thresh.astype(x.dtype)).astype(x.dtype)
+    _, idx = jax.lax.top_k(flat, k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return mask.reshape(x.shape).astype(x.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,3 +60,26 @@ class CompressedFedAvg(Strategy):
             new_res = jax.tree.map(lambda d, s: d - s, delta, sent)
             return sent, {"residual": new_res}
         return sent, client_state
+
+    # -- packed int8 path (kernels/ops.quant_aggregate) -------------------
+    @property
+    def packs_deltas(self) -> bool:
+        return self.fl.compression == "int8"
+
+    def postprocess_packed(self, delta, client_state, rng):
+        """int8 + block-scale emission in the kernel's flat layout. The
+        error-feedback residual is computed against the dequantized send
+        (exactly what the server will reconstruct), and — because packing
+        pads per leaf — it is bitwise the residual the unpacked
+        ``_roundtrip_int8`` path would have produced."""
+        ef = self.fl.error_feedback and "residual" in (client_state or {})
+        if ef:
+            delta = jax.tree.map(lambda d, r: d + r.astype(d.dtype),
+                                 delta, client_state["residual"])
+        pd = packing.quantize_tree(delta)
+        if ef:
+            sent = packing.unpack_tree(packing.dequant_flat(pd), delta)
+            new_res = jax.tree.map(lambda d, s: d - s.astype(d.dtype),
+                                   delta, sent)
+            return pd, {"residual": new_res}
+        return pd, client_state

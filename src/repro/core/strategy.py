@@ -83,6 +83,23 @@ class Strategy:
         (delta, new_client_state)."""
         return delta, client_state
 
+    @property
+    def packs_deltas(self) -> bool:
+        """True when clients emit ``packing.PackedDelta`` (int8 + block
+        scales) via ``postprocess_packed`` instead of a param-shaped delta —
+        the drivers then aggregate through ``kernels/ops.quant_aggregate``
+        rather than a dense f32 mean. A static property of the bound config
+        (compression is part of the program signature, so the planner never
+        mixes packed and unpacked lanes in one bucket)."""
+        return False
+
+    def postprocess_packed(self, delta, client_state, rng):
+        """Packed counterpart of ``postprocess``: returns
+        (PackedDelta, new_client_state). Only called when ``packs_deltas``."""
+        raise NotImplementedError(
+            f"{self.name}: packs_deltas is True but postprocess_packed "
+            "is not implemented")
+
     # -- server -----------------------------------------------------------
     def server_update(self, params, agg_delta, server_state):
         """params + aggregated delta (server_lr scaled). Returns

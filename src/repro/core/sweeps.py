@@ -66,6 +66,7 @@ _CATEGORICAL_CHOICES = {
     "placement": ("spatial", "temporal", "auto"),
     "mode": ("sync", "async"),
     "async_buffer": None,            # any int >= 0
+    "compression": ("none", "int8", "topk"),
 }
 
 

@@ -282,12 +282,118 @@ def rmsnorm(x, w, eps: float = 1e-6):
     return _ref.rmsnorm_ref(x, w, eps)
 
 
+# ---------------------------------------------------------------------------
+# Quantized aggregation (the FL compressed-comms hot path)
+# ---------------------------------------------------------------------------
+
+# Trace-time dispatch counters. ``calls`` increments every time a program
+# containing quant_aggregate is TRACED (cached jit re-executions do not
+# retrace), so tests assert the compressed drivers really route through this
+# function — instrumentation, not code inspection.
+_QUANT_AGG_STATS = {"calls": 0, "batched_fallbacks": 0, "last_impl": None}
+
+
+def quant_agg_stats() -> dict:
+    """Snapshot of the quant_aggregate dispatch counters."""
+    return dict(_QUANT_AGG_STATS)
+
+
+def reset_quant_agg_stats() -> None:
+    _QUANT_AGG_STATS.update(calls=0, batched_fallbacks=0, last_impl=None)
+
+
+def _is_batched(*arrays) -> bool:
+    """True when tracing under a jax.vmap (campaign lane axis)."""
+    from jax.interpreters import batching
+    return any(isinstance(a, batching.BatchTracer) for a in arrays)
+
+
+def _quant_agg_fused(qdeltas, scales, weights):
+    """Fused dequant + weighted sum: the client accumulation is unrolled
+    (C is a static shape), so XLA fuses the whole chain into ONE pass over
+    the output — each int8 byte is converted in-register and feeds the
+    accumulator directly; the (C, N) f32 dequant never exists in memory.
+    (A ``.sum(axis=0)`` or einsum formulation defeats this on CPU: XLA
+    materializes reduce/dot-general operands.)"""
+    C, N = qdeltas.shape
+    nblocks = scales.shape[-1]
+    out = jnp.zeros((nblocks, N // nblocks), jnp.float32)
+    for c in range(C):
+        deq = qdeltas[c].astype(jnp.float32).reshape(nblocks, -1) \
+            * scales[c, :, None]
+        out = out + deq * weights[c]
+    return out.reshape(N)
+
+
+def _quant_agg_dequant_first(qdeltas, scales, weights):
+    """Reference path: materialize the whole (C, N) f32 dequant, then run
+    the same unrolled weighted accumulation over it. ``optimization_barrier``
+    is the identity on values — per-client arithmetic is (q*scale)*weight
+    with the identical left-to-right accumulation, so the result is
+    bit-for-bit the fused path's — but it pins the f32 intermediate in
+    memory: 4x the int8 bytes written AND read back. That traffic gap is
+    what BENCH_agg measures and the CI bench gate enforces."""
+    C, N = qdeltas.shape
+    nblocks = scales.shape[-1]
+    d = qdeltas.astype(jnp.float32).reshape(C, nblocks, N // nblocks)
+    d = d * scales[..., None]
+    d = jax.lax.optimization_barrier(d)
+    out = jnp.zeros((nblocks, N // nblocks), jnp.float32)
+    for c in range(C):
+        out = out + d[c] * weights[c]
+    return out.reshape(N)
+
+
+def _quant_agg_pallas(qdeltas, scales, weights, interpret: bool):
+    """Pad-and-mask wrapper around the Pallas kernel: N is padded up to a
+    whole number of kernel tiles with zero blocks (q == 0 AND scale == 0, so
+    padding contributes exactly 0.0) and the pad lanes are sliced off."""
+    from repro.kernels.quant_aggregate import quant_aggregate as _k
+    C, N = qdeltas.shape
+    qblock = N // scales.shape[-1]
+    block_n = qblock * max(1, 4096 // qblock)
+    pad = (-N) % block_n
+    if pad:
+        qdeltas = jnp.pad(qdeltas, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // qblock)))
+    out = _k(qdeltas, scales, weights, block_n=block_n, interpret=interpret)
+    return out[:N] if pad else out
+
+
 def quant_aggregate(qdeltas, scales, weights):
+    """-> (N,) f32: ``sum_c weights[c] * dequant(qdeltas[c])``.
+
+    Dispatch (rows: REPRO_KERNEL_IMPL; REPRO_QUANT_AGG=dequant overrides all
+    rows with the dequant-first reference path):
+
+    - ``pallas``/``interpret`` — Pallas kernel (compiled / interpret=True),
+      via the pad-and-mask wrapper; under a campaign ``vmap`` falls back to
+      the fused jnp path with a logged warning (bitwise-identical result);
+    - ``jnp`` (CPU default)   — the fused jnp expression.
+    """
+    mode = os.environ.get("REPRO_QUANT_AGG", "fused")
+    if mode not in ("fused", "dequant"):
+        raise ValueError(f"REPRO_QUANT_AGG={mode!r} (want fused|dequant)")
+    _QUANT_AGG_STATS["calls"] += 1
+    if mode == "dequant":
+        _QUANT_AGG_STATS["last_impl"] = "dequant-first"
+        return _quant_agg_dequant_first(qdeltas, scales, weights)
     impl = backend()
     if impl in ("pallas", "interpret"):
-        from repro.kernels.quant_aggregate import quant_aggregate as _k
-        return _k(qdeltas, scales, weights, interpret=(impl == "interpret"))
-    return _ref.quant_aggregate_ref(qdeltas, scales, weights)
+        if _is_batched(qdeltas, scales, weights):
+            import warnings
+            _QUANT_AGG_STATS["batched_fallbacks"] += 1
+            _QUANT_AGG_STATS["last_impl"] = "jnp-fused(vmap-fallback)"
+            warnings.warn(
+                "quant_aggregate: Pallas kernel requested under a vmapped "
+                "lane axis; using the fused jnp path for this trace "
+                "(bitwise-identical result)", stacklevel=2)
+            return _quant_agg_fused(qdeltas, scales, weights)
+        _QUANT_AGG_STATS["last_impl"] = impl
+        return _quant_agg_pallas(qdeltas, scales, weights,
+                                 interpret=(impl == "interpret"))
+    _QUANT_AGG_STATS["last_impl"] = "jnp-fused"
+    return _quant_agg_fused(qdeltas, scales, weights)
 
 
 def quantize_blockwise(x, block: int = 256):

@@ -416,7 +416,8 @@ class CampaignExecutor(Executor):
         if "hist" not in self.state:
             ring = self.schedules[0].ring
             self.state = shard_lanes(jax.vmap(
-                lambda st: async_init_state(st, ring))(self.state),
+                lambda st: async_init_state(st, ring, fl,
+                                            self.job.strategy))(self.state),
                 self.mesh)
 
     # -- compiled programs: the Executor's, under an outer vmap ------------

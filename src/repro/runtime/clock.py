@@ -160,6 +160,10 @@ class EventSchedule:
             "client": jnp.asarray(self.client),
             "task": jnp.asarray(self.task),
             "staleness": jnp.asarray(self.staleness),
+            # accept gates the packed FedBuff buffer-slot write: a rejected
+            # arrival must not claim a slot (coeff == 0 can't distinguish it
+            # from an accepted zero-weight client)
+            "accept": jnp.asarray(self.accept),
             "apply": jnp.asarray(self.apply),
             "read_slot": jnp.asarray(self.read_slot),
             "write_slot": jnp.asarray(self.write_slot),

@@ -146,7 +146,8 @@ class Executor:
             concurrency=fl.async_concurrency)
         self.sched_dev = self.schedule.device_arrays()
         if "hist" not in self.state:
-            self.state = async_init_state(self.state, self.schedule.ring)
+            self.state = async_init_state(self.state, self.schedule.ring,
+                                          fl, self.job.strategy)
 
     # -- Alg. 1 lines 1-15: scaffold ------------------------------------
     def scaffold(self):

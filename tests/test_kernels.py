@@ -182,3 +182,84 @@ def test_quantize_roundtrip_error_bound():
     amax = np.abs(np.asarray(x).reshape(-1, 256)).max(1, keepdims=True)
     bound = np.repeat(amax / 127.0, 256, 1).reshape(-1) / 2 + 1e-7
     assert (err <= bound + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# quant_aggregate dispatcher (ops-level: the path compressed drivers call)
+# ---------------------------------------------------------------------------
+
+def _qagg_inputs(C, N, qblock, key=KEY):
+    ks = jax.random.split(key, 3)
+    qd = jax.random.randint(ks[0], (C, N), -127, 128, jnp.int8)
+    sc = jax.random.uniform(ks[1], (C, N // qblock), jnp.float32, 1e-4, 1e-2)
+    w = jax.random.uniform(ks[2], (C,), jnp.float32)
+    return qd, sc, w / w.sum()
+
+
+@pytest.mark.parametrize("C,N,qblock", [(4, 8192, 256), (7, 4096, 128),
+                                        (1, 2048, 256)])
+def test_quant_agg_fused_equals_dequant_first_bitwise(C, N, qblock):
+    """The BENCH_agg contract's correctness half: the fused path and the
+    dequant-first reference share per-client arithmetic and accumulation
+    order, so they must agree bit-for-bit, not just allclose."""
+    qd, sc, w = _qagg_inputs(C, N, qblock)
+    fused = ops._quant_agg_fused(qd, sc, w)
+    dequant = ops._quant_agg_dequant_first(qd, sc, w)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(dequant))
+
+
+@pytest.mark.parametrize("N,qblock", [(1280, 256), (4096 + 128, 128),
+                                      (512, 512)])
+def test_quant_aggregate_pad_and_mask_non_divisible(N, qblock, monkeypatch):
+    """Pytree packing yields N that rarely divides the kernel tile: the
+    interpret-path wrapper must zero-pad up to whole tiles and slice the
+    pad back off, matching the unpadded jnp reference."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "interpret")
+    qd, sc, w = _qagg_inputs(5, N, qblock)
+    got = ops.quant_aggregate(qd, sc, w)
+    assert got.shape == (N,)
+    want = ref.quant_aggregate_ref(qd, sc, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_quant_aggregate_vmap_falls_back_to_fused(monkeypatch):
+    """Under a campaign lane vmap the Pallas wrapper can't run (pallas_call
+    doesn't trace through a batched dim here); the dispatcher must fall
+    back to the fused jnp path — warning + counter, bitwise per-lane."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "interpret")
+    L, C, N, qblock = 3, 4, 2048, 256
+    ks = jax.random.split(KEY, 3)
+    qd = jax.random.randint(ks[0], (L, C, N), -127, 128, jnp.int8)
+    sc = jax.random.uniform(ks[1], (L, C, N // qblock), jnp.float32,
+                            1e-4, 1e-2)
+    w = jax.random.uniform(ks[2], (L, C), jnp.float32)
+    ops.reset_quant_agg_stats()
+    with pytest.warns(UserWarning, match="vmapped"):
+        got = jax.vmap(ops.quant_aggregate)(qd, sc, w)
+    stats = ops.quant_agg_stats()
+    assert stats["calls"] == 1 and stats["batched_fallbacks"] == 1
+    assert stats["last_impl"] == "jnp-fused(vmap-fallback)"
+    for lane in range(L):
+        np.testing.assert_array_equal(
+            np.asarray(got[lane]),
+            np.asarray(ops._quant_agg_fused(qd[lane], sc[lane], w[lane])))
+
+
+def test_quant_aggregate_rejects_unknown_mode(monkeypatch):
+    monkeypatch.setenv("REPRO_QUANT_AGG", "fussed")
+    qd, sc, w = _qagg_inputs(2, 1024, 256)
+    with pytest.raises(ValueError, match="REPRO_QUANT_AGG"):
+        ops.quant_aggregate(qd, sc, w)
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled Pallas path needs a TPU backend")
+def test_quant_aggregate_pallas_compiled_vs_ref():
+    """TPU-only: the compiled (non-interpret) kernel against the jnp
+    oracle — a capability skip on CPU runners, never a silent pass."""
+    qd, sc, w = _qagg_inputs(8, 1 << 16, 256)
+    got = pallas_quant_agg(qd, sc, w, block_n=4096, interpret=False)
+    want = ref.quant_aggregate_ref(qd, sc, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)

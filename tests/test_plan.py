@@ -223,6 +223,29 @@ def test_heterogeneous_sync_campaign_bitwise_equals_single_runs():
                               pe.lane_params(lane))
 
 
+def test_heterogeneous_compression_campaign_bitwise_equals_single_runs():
+    """compression x seed under the compressed strategy: dense, packed
+    int8 (kernels/ops.quant_aggregate) and topk aggregation are three
+    different traced programs -> 3 buckets, every lane bitwise its
+    independent single run."""
+    def mk(coord=None, sweep=None):
+        raw = _raw(coord, sweep=sweep)
+        raw["strategy"]["strategy"] = "compressed"
+        raw["strategy"]["train_params"].update(
+            {"compression": (coord or {}).get("compression", "none"),
+             "error_feedback": True})
+        return raw
+
+    sweep = {"compression": ["none", "int8", "topk"], "seeds": [3, 5]}
+    pe = PlanExecutor(load_job(mk(sweep=sweep))).scaffold()
+    assert pe.S == 6 and len(pe.plan.buckets) == 3
+    pe.run()
+    for lane, coord in enumerate(pe.plan.coords):
+        state, _ = Executor(load_job(mk(coord))).scaffold().run()
+        _assert_bitwise_equal(jax.tree.map(np.asarray, state["params"]),
+                              pe.lane_params(lane))
+
+
 def test_heterogeneous_async_campaign_bitwise_equals_single_runs():
     """Async buckets: strategy x seed under FedBuff, lanes bitwise their
     single runs (event scan + per-lane schedules under the bucket vmap)."""

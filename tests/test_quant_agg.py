@@ -1,0 +1,135 @@
+"""Compressed-aggregation routing contract (the int8 packed path).
+
+With ``compression: int8`` the drivers must aggregate through
+``kernels/ops.quant_aggregate`` — asserted via the dispatcher's trace-time
+counters, not code inspection — and the trajectory must be bitwise
+identical between the fused path and the dequant-first reference
+(``REPRO_QUANT_AGG=dequant``), in every driver: sync spatial, sync
+temporal, async FedAsync (per-event) and async FedBuff (buffer flushes).
+Chunking invariance must survive the packed buffers FedBuff carries in its
+event-scan state.
+"""
+import os
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.jobs import load_job
+from repro.kernels import ops
+from repro.runtime.executor import Executor
+
+
+def _job(rounds_per_launch: int = 2, rounds: int = 4, seed: int = 7, *,
+         mode: str = "sync", placement: str = "spatial",
+         async_buffer: int = 0, runtime=None, **train_extra):
+    tp = {"n_clients": 4, "local_epochs": 1, "client_lr": 0.1,
+          "rounds": rounds, "seed": seed, "mode": mode,
+          "placement": placement, "rounds_per_launch": rounds_per_launch,
+          "compression": "int8", "error_feedback": True}
+    if mode == "async":
+        tp.update({"async_buffer": async_buffer, "max_staleness": 4,
+                   "staleness_exponent": 0.5})
+        runtime = runtime or {"straggler_prob": 0.2, "duration_sigma": 0.25}
+    tp.update(train_extra)
+    return load_job({
+        "name": f"quant-agg-{mode}-{placement}",
+        "model": {"arch": "flsim-mlp"},
+        "dataset": {"dataset": "synthetic_vision", "n_items": 256,
+                    "distribution": {"partition": "dirichlet",
+                                     "dirichlet_alpha": 0.5}},
+        "strategy": {"strategy": "compressed", "train_params": tp},
+        "runtime": runtime or {"straggler_prob": 0.2,
+                               "straggler_overprovision": 1.25},
+    })
+
+
+def _params(state):
+    return jax.tree.map(np.asarray, state["params"])
+
+
+def _assert_bitwise_equal(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+# one driver config per compiled aggregation site
+DRIVERS = {
+    "sync-spatial": dict(mode="sync", placement="spatial"),
+    "sync-temporal": dict(mode="sync", placement="temporal"),
+    "async-fedasync": dict(mode="async", async_buffer=0),
+    "async-fedbuff": dict(mode="async", async_buffer=3),
+}
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_int8_routes_through_quant_aggregate(driver, monkeypatch):
+    """The dispatcher's trace-time counter must tick when the compressed
+    driver compiles — proof the packed path is the one executing."""
+    monkeypatch.delenv("REPRO_QUANT_AGG", raising=False)
+    jax.clear_caches()                 # force a fresh trace per driver
+    ops.reset_quant_agg_stats()
+    ex = Executor(_job(**DRIVERS[driver])).scaffold()
+    _, logger = ex.run()
+    stats = ops.quant_agg_stats()
+    assert stats["calls"] > 0, f"{driver}: aggregation bypassed the kernel"
+    assert stats["last_impl"] == "jnp-fused"
+    losses = logger.series("loss")
+    assert losses[-1] < losses[0], f"{driver}: compressed run not learning"
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_fused_equals_dequant_first_trajectory(driver, monkeypatch):
+    """End-to-end bitwise contract: the whole trajectory (quantize ->
+    aggregate -> server update, every round) agrees between the fused
+    kernel path and the dequant-first reference."""
+    runs = {}
+    for quant_mode in ("fused", "dequant"):
+        monkeypatch.setenv("REPRO_QUANT_AGG", quant_mode)
+        jax.clear_caches()             # env is read at trace time
+        state, _ = Executor(_job(**DRIVERS[driver])).scaffold().run()
+        runs[quant_mode] = _params(state)
+    _assert_bitwise_equal(runs["fused"], runs["dequant"])
+
+
+@pytest.mark.parametrize("async_buffer", [3, 0])
+def test_packed_async_chunked_equals_unchunked(async_buffer, monkeypatch):
+    """FedBuff carries packed (K, N) int8 buffers in the event-scan state;
+    chunk boundaries must not perturb them. availability < 1 mixes
+    rejected arrivals in, so the accept-gated slot writes are exercised
+    (a rejected event must neither fill a slot nor advance the count)."""
+    monkeypatch.delenv("REPRO_QUANT_AGG", raising=False)
+    rt = {"straggler_prob": 0.2, "duration_sigma": 0.25,
+          "availability": 0.85}
+    runs = {}
+    for chunk in (1, 4, 3):
+        ex = Executor(_job(chunk, mode="async", async_buffer=async_buffer,
+                           runtime=rt)).scaffold()
+        state, _ = ex.run()
+        runs[chunk] = _params(state)
+    _assert_bitwise_equal(runs[1], runs[4])
+    _assert_bitwise_equal(runs[1], runs[3])
+
+
+def test_packed_sync_chunked_equals_unchunked(monkeypatch):
+    monkeypatch.delenv("REPRO_QUANT_AGG", raising=False)
+    runs = {}
+    for chunk in (1, 4, 3):
+        state, _ = Executor(_job(chunk)).scaffold().run()
+        runs[chunk] = _params(state)
+    _assert_bitwise_equal(runs[1], runs[4])
+    _assert_bitwise_equal(runs[1], runs[3])
+
+
+def test_topk_does_not_take_packed_path(monkeypatch):
+    """Only int8 packs; topk still flows through the dense postprocess
+    (its sends are sparse f32, not block-quantized)."""
+    monkeypatch.delenv("REPRO_QUANT_AGG", raising=False)
+    jax.clear_caches()
+    ops.reset_quant_agg_stats()
+    job = _job(compression="topk", topk_ratio=0.2)
+    assert not job.strategy.packs_deltas
+    Executor(job).scaffold().run()
+    assert ops.quant_agg_stats()["calls"] == 0

@@ -170,6 +170,68 @@ def test_compression_error_feedback_recovers(comp):
     assert err < 0.015, f"error feedback failed to recover: {err}"
 
 
+def test_topk_mask_exact_k_under_ties():
+    """All-equal magnitudes tie at the k-th value: a threshold compare
+    would keep everything; the scatter mask must keep exactly k."""
+    from repro.core.strategies.compressed import _topk_mask
+    x = jnp.ones((100,))
+    mask = _topk_mask(x, 0.2)
+    assert int(mask.sum()) == 20
+    # blocks of repeated values around the cut: still exactly k survive
+    y = jnp.repeat(jnp.asarray([3.0, 2.0, 2.0, 1.0]), 25)
+    mask = _topk_mask(y, 0.3)
+    assert int(mask.sum()) == 30
+
+
+def test_topk_postprocess_keeps_exact_budget():
+    fl = FLConfig(strategy="compressed", compression="topk", topk_ratio=0.1,
+                  error_feedback=False)
+    s = get_strategy(fl)
+    d = {"w": jnp.ones((200,))}          # every element ties
+    sent, _ = s.postprocess(d, {}, jax.random.PRNGKey(0))
+    assert int((sent["w"] != 0).sum()) == 20
+
+
+def test_packed_int8_matches_roundtrip_path():
+    """The packed emission (what quant_aggregate consumes) must be the
+    same quantization the unpacked ``_roundtrip_int8`` send models:
+    per-leaf padding keeps block boundaries identical, so dequantized
+    sends AND error-feedback residuals agree bitwise across the two
+    representations of the same compression."""
+    from repro.core import packing
+    fl = FLConfig(strategy="compressed", compression="int8",
+                  error_feedback=True)
+    s = get_strategy(fl)
+    assert s.packs_deltas
+    p = toy_params(n=300)                # w: 300 floats -> pads to 512
+    delta = jax.tree.map(lambda t: 0.1 * t, p)
+    rng = jax.random.PRNGKey(0)
+
+    sent_ref, cst_ref = s.postprocess(delta, s.client_state_init(p), rng)
+    pd, cst_pk = s.postprocess_packed(delta, s.client_state_init(p), rng)
+    sent_pk = packing.unpack_tree(packing.dequant_flat(pd), delta)
+    for a, b in zip(jax.tree.leaves(sent_ref), jax.tree.leaves(sent_pk)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(cst_ref["residual"]),
+                    jax.tree.leaves(cst_pk["residual"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packing_roundtrip_identity():
+    """pack -> unpack is the identity on any float pytree (padding is
+    sliced off per leaf), and packed_size reports the padded layout."""
+    from repro.core import packing
+    p = toy_params(n=300)
+    n, nblocks = packing.packed_size(p)
+    assert n == nblocks * packing.QBLOCK
+    flat = packing.pack_tree(p)
+    assert flat.shape == (n,)
+    back = packing.unpack_tree(flat, p)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b))
+
+
 def test_moon_contrastive_term_positive():
     fl = FLConfig(strategy="moon", moon_mu=1.0, moon_tau=0.5)
     s = get_strategy(fl)

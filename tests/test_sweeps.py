@@ -95,6 +95,45 @@ def test_async_campaign_bitwise_equals_single_runs():
         camp, lambda c: _raw(c, mode="async", chunk=2))
 
 
+def test_compressed_campaign_bitwise_equals_single_runs():
+    """The packed int8 path under the campaign vmap: lanes must stay
+    bitwise their single runs (quantize -> quant_aggregate -> server
+    update per round), and the aggregation must actually route through
+    the kernels/ops dispatcher inside the vmapped trace."""
+    from repro.kernels import ops
+
+    def mk(coord=None):
+        raw = _raw(coord, strategy="compressed")
+        raw["strategy"]["train_params"].update(
+            {"compression": "int8", "error_feedback": True})
+        return raw
+
+    sweep = {"seeds": [3, 5], "client_lr": [0.05, 0.1]}
+    raw = mk()
+    raw["sweep"] = sweep
+    jax.clear_caches()
+    ops.reset_quant_agg_stats()
+    camp = CampaignExecutor(load_job(raw)).scaffold()
+    camp.run()
+    assert camp.S == 4
+    assert ops.quant_agg_stats()["calls"] > 0, \
+        "campaign aggregation bypassed the kernel dispatcher"
+    _assert_lanes_match_singles(camp, mk)
+
+
+def test_compression_is_a_categorical_sweep_axis():
+    """A compression axis buckets by program signature (dense vs packed
+    aggregation are different traced programs) — it must parse, expand,
+    and land in the categorical plane, with typos caught."""
+    spec = sweeps.parse_sweep({"compression": ["none", "int8", "topk"]})
+    assert spec.size == 3 and spec.categorical_names == ("compression",)
+    from repro.configs.base import FLConfig
+    assert [f.compression for f in sweeps.expand(FLConfig(), spec)] == \
+        ["none", "int8", "topk"]
+    with pytest.raises(KeyError, match="int8"):
+        sweeps.parse_sweep({"compression": ["int9"]})
+
+
 def test_fedprox_mu_sweep_bitwise():
     """The scalar plane reaches strategy hooks: swept prox_mu through
     FedProx's local_loss, bitwise vs single runs."""
