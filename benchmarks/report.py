@@ -30,6 +30,11 @@ BENCH_CONTRACTS = {
                     lambda r: r["speedup_sharded_vs_vmapped"]),
     "BENCH_agg": (1.5, "fused int8 aggregation vs dequant-first",
                   lambda r: r["speedup_fused_vs_dequant"]),
+    # an overhead budget, not a speedup claim: 0.95x = the flight recorder
+    # may cost at most 5% on the chunk=1 worst case
+    "BENCH_telemetry": (0.95,
+                        "campaign with flight recorder vs telemetry off",
+                        lambda r: r["speedup_on_vs_off"]),
 }
 
 

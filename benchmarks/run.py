@@ -84,6 +84,11 @@ def main() -> None:
         # the memory-bound 1M-param scale; --quick keeps the shape (the
         # traffic ratio is the claim) and only cuts the timed reps
         "agg": lambda: flbench.bench_agg(reps=10 if q else 30),
+        # flight-recorder overhead at chunk=1 (worst case: a boundary per
+        # round); --quick keeps the S=8 grid and cuts rounds/reps. Also
+        # writes the telemetry_smoke/ trace artifacts CI uploads
+        "telemetry": lambda: flbench.bench_telemetry(
+            rounds=8 if q else 16, reps=3 if q else 4),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

@@ -52,9 +52,13 @@ _DATASET_KEYS = {"dataset", "n_items", "distribution"}
 _MODEL_KEYS = {"arch", "reduced"}
 _STRATEGY_KEYS = {"strategy", "train_params", "aggregator_params"}
 # paper Fig. 2's six sections (clusters / node sections are accepted but
-# not yet consumed) + model and the campaign sweep
+# not yet consumed) + model, the campaign sweep, and the flight recorder
 _TOP_KEYS = {"name", "model", "dataset", "consensus", "strategy", "runtime",
-             "sweep", "clusters", "node_defaults", "node_configs"}
+             "sweep", "clusters", "node_defaults", "node_configs",
+             "telemetry"}
+# flight-recorder knobs (repro/telemetry): presence of the section turns
+# the recorder on (enabled: false to keep a section but switch it off)
+_TELEMETRY_KEYS = {"enabled", "out_dir", "profile_chunks"}
 
 
 def _check_keys(section_name: str, section, allowed) -> None:
@@ -146,6 +150,7 @@ def load_job(path_or_dict) -> Job:
     _check_keys("dataset.distribution", ds.get("distribution"), _FL_KEYS)
     _check_keys("model", raw.get("model"), _MODEL_KEYS)
     _check_keys("runtime", rt, _FL_KEYS | _CSM_KEYS)
+    _check_keys("telemetry", raw.get("telemetry"), _TELEMETRY_KEYS)
 
     flkw = {}
     for section in (strat.get("train_params", {}),

@@ -13,6 +13,7 @@ blockwise path (flash-style recomputing backward via ``jax.custom_vjp``).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -290,16 +291,52 @@ def rmsnorm(x, w, eps: float = 1e-6):
 # containing quant_aggregate is TRACED (cached jit re-executions do not
 # retrace), so tests assert the compressed drivers really route through this
 # function — instrumentation, not code inspection.
-_QUANT_AGG_STATS = {"calls": 0, "batched_fallbacks": 0, "last_impl": None}
+#
+# Counters are SCOPED, not process-global: ``quant_agg_scope()`` pushes a
+# fresh frame, increments land on every active frame, and
+# ``quant_agg_stats()`` snapshots the innermost one — so two runs in one
+# process (each executor's chunk loop holds its own scope) never bleed
+# routing counts into each other's telemetry, while the bottom frame keeps
+# the legacy process-wide view for callers outside any scope.
+def _quant_agg_frame() -> dict:
+    return {"calls": 0, "batched_fallbacks": 0, "last_impl": None}
+
+
+_QUANT_AGG_FRAMES = [_quant_agg_frame()]
 
 
 def quant_agg_stats() -> dict:
-    """Snapshot of the quant_aggregate dispatch counters."""
-    return dict(_QUANT_AGG_STATS)
+    """Snapshot of the innermost active scope's dispatch counters (the
+    process-wide frame when no ``quant_agg_scope`` is open)."""
+    return dict(_QUANT_AGG_FRAMES[-1])
 
 
 def reset_quant_agg_stats() -> None:
-    _QUANT_AGG_STATS.update(calls=0, batched_fallbacks=0, last_impl=None)
+    """Zero the innermost active scope's counters."""
+    _QUANT_AGG_FRAMES[-1].update(_quant_agg_frame())
+
+
+@contextlib.contextmanager
+def quant_agg_scope():
+    """A fresh counter frame for one run's telemetry. Yields the live frame
+    dict; increments inside the scope also propagate to every enclosing
+    frame (outer totals stay complete)."""
+    frame = _quant_agg_frame()
+    _QUANT_AGG_FRAMES.append(frame)
+    try:
+        yield frame
+    finally:
+        _QUANT_AGG_FRAMES.remove(frame)
+
+
+def _quant_agg_bump(key: str) -> None:
+    for frame in _QUANT_AGG_FRAMES:
+        frame[key] += 1
+
+
+def _quant_agg_impl(name) -> None:
+    for frame in _QUANT_AGG_FRAMES:
+        frame["last_impl"] = name
 
 
 def _is_batched(*arrays) -> bool:
@@ -374,25 +411,25 @@ def quant_aggregate(qdeltas, scales, weights):
     mode = os.environ.get("REPRO_QUANT_AGG", "fused")
     if mode not in ("fused", "dequant"):
         raise ValueError(f"REPRO_QUANT_AGG={mode!r} (want fused|dequant)")
-    _QUANT_AGG_STATS["calls"] += 1
+    _quant_agg_bump("calls")
     if mode == "dequant":
-        _QUANT_AGG_STATS["last_impl"] = "dequant-first"
+        _quant_agg_impl("dequant-first")
         return _quant_agg_dequant_first(qdeltas, scales, weights)
     impl = backend()
     if impl in ("pallas", "interpret"):
         if _is_batched(qdeltas, scales, weights):
             import warnings
-            _QUANT_AGG_STATS["batched_fallbacks"] += 1
-            _QUANT_AGG_STATS["last_impl"] = "jnp-fused(vmap-fallback)"
+            _quant_agg_bump("batched_fallbacks")
+            _quant_agg_impl("jnp-fused(vmap-fallback)")
             warnings.warn(
                 "quant_aggregate: Pallas kernel requested under a vmapped "
                 "lane axis; using the fused jnp path for this trace "
                 "(bitwise-identical result)", stacklevel=2)
             return _quant_agg_fused(qdeltas, scales, weights)
-        _QUANT_AGG_STATS["last_impl"] = impl
+        _quant_agg_impl(impl)
         return _quant_agg_pallas(qdeltas, scales, weights,
                                  interpret=(impl == "interpret"))
-    _QUANT_AGG_STATS["last_impl"] = "jnp-fused"
+    _quant_agg_impl("jnp-fused")
     return _quant_agg_fused(qdeltas, scales, weights)
 
 

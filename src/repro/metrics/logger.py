@@ -9,8 +9,25 @@ import csv
 import json
 import pathlib
 import resource
+import sys
 import time
 from typing import Optional
+
+
+def _rss_mb(ru_maxrss: int) -> float:
+    """``ru_maxrss`` -> MB. getrusage reports kilobytes on Linux but BYTES
+    on macOS (see getrusage(2) on each) — without normalizing, Darwin
+    dashboards read 1024x too large."""
+    return ru_maxrss / (2**20 if sys.platform == "darwin" else 1024)
+
+
+def host_usage() -> dict:
+    """Host resource snapshot (CPU seconds + peak RSS, platform-normalized)
+    — shared by the per-round logger rows and the flight recorder's
+    per-launch host counters so the two can never disagree on units."""
+    usage = resource.getrusage(resource.RUSAGE_SELF)
+    return {"cpu_s": round(usage.ru_utime + usage.ru_stime, 3),
+            "max_rss_mb": round(_rss_mb(usage.ru_maxrss), 1)}
 
 
 class PerformanceLogger:
@@ -23,12 +40,10 @@ class PerformanceLogger:
             self.out_dir.mkdir(parents=True, exist_ok=True)
 
     def log_round(self, round_idx: int, **metrics):
-        usage = resource.getrusage(resource.RUSAGE_SELF)
         row = {
             "round": round_idx,
             "wall_s": round(time.time() - self._t0, 3),
-            "cpu_s": round(usage.ru_utime + usage.ru_stime, 3),
-            "max_rss_mb": usage.ru_maxrss // 1024,
+            **host_usage(),
             **{k: (float(v) if hasattr(v, "__float__") else v)
                for k, v in metrics.items()},
         }
@@ -39,7 +54,12 @@ class PerformanceLogger:
         return row
 
     def to_csv(self, path=None):
-        path = path or (self.out_dir / f"{self.run_name}.csv")
+        if path is None:
+            if self.out_dir is None:
+                raise ValueError(
+                    "PerformanceLogger.to_csv needs an explicit path when "
+                    "the logger was constructed with out_dir=None")
+            path = self.out_dir / f"{self.run_name}.csv"
         keys = sorted({k for r in self.rows for k in r})
         with open(path, "w", newline="") as f:
             w = csv.DictWriter(f, fieldnames=keys)

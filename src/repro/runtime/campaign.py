@@ -547,6 +547,31 @@ class CampaignExecutor(Executor):
                 agg.setdefault(k, []).append(v)
         rows[-1].update({k: float(np.mean(v)) for k, v in agg.items()})
 
+    # -- flight-recorder hooks ---------------------------------------------
+    def _telemetry_attrs(self) -> dict:
+        """Launch-span attrs: lane occupancy at launch time (the padded
+        width is what the compiled program actually scans)."""
+        return {"n_alive": len(self.alive_lanes()), "S": self.S,
+                "S_pad": self.S_pad}
+
+    def _record_lane_telemetry(self):
+        """Post-launch counter: alive/total lanes, plus per-shard alive
+        counts under a lane mesh (lanes shard in contiguous blocks of
+        ``S_pad // lane_devices`` — the shard with dead lanes is the one
+        idling its device). Emitted only when occupancy changed (first
+        launch, then per scheduler drop) — a steady campaign pays
+        nothing per chunk for it."""
+        values = {"alive": len(self.alive_lanes()), "total": self.S}
+        if self.lane_devices:
+            per = self.S_pad // self.lane_devices
+            for d in range(self.lane_devices):
+                values[f"shard{d}_alive"] = int(
+                    (self.alive[d * per:(d + 1) * per] > 0).sum())
+        if values != getattr(self, "_last_occupancy", None):
+            self._last_occupancy = values
+            self.recorder.counter("lane_occupancy",
+                                  track=self.telemetry_track, **values)
+
     # -- results table -----------------------------------------------------
     def _lead_columns(self):
         return [*self.spec.names, "traj", "round"]
@@ -556,7 +581,9 @@ class CampaignExecutor(Executor):
         # append this chunk's rows: a crash loses at most the open chunk,
         # and resume re-adopts what is there
         if self._table is not None:
-            self._table.flush(self.results, self._lead_columns())
+            with self.recorder.span("table_flush",
+                                    track=self.telemetry_track):
+                self._table.flush(self.results, self._lead_columns())
 
     def run(self, rounds: Optional[int] = None):
         state, logger = super().run(rounds)

@@ -44,8 +44,10 @@ from repro.core.kvstore import KVStore
 from repro.core.plan import resolve_placement
 from repro.core.rounds import build_multi_round, init_state
 from repro.data.pipeline import stage_partitions
-from repro.metrics.logger import PerformanceLogger
+from repro.kernels import ops as kernel_ops
+from repro.metrics.logger import PerformanceLogger, host_usage
 from repro.sharding.axes import AxisCtx
+from repro.telemetry.recorder import FlightRecorder
 
 
 @dataclasses.dataclass
@@ -55,10 +57,20 @@ class Executor:
     ckpt_dir: Optional[str] = None
     logger: Optional[PerformanceLogger] = None
     eval_fn: Optional[Callable] = None    # (params) -> dict of metrics
+    # Flight recorder (repro/telemetry): host-side span tracing + launch
+    # counters over the chunk-boundary seams. None -> built from the job's
+    # ``telemetry:`` section (a no-op recorder when the section is absent);
+    # the planner passes one shared recorder with per-bucket tracks.
+    recorder: Optional[FlightRecorder] = None
+    telemetry_track: str = "run"
 
     def __post_init__(self):
         self.kv = KVStore()
         self.logger = self.logger or PerformanceLogger(run_name=self.job.name)
+        if self.recorder is None:
+            self.recorder = FlightRecorder.from_job(
+                self.job, fallback_dir=getattr(self, "out_dir", None))
+        self._launches = 0                # launch ordinal (profile_chunks)
         fl = self.job.fl
         # single source of truth with core/plan.py's program signatures:
         # a drift here would bucket lanes whose compiled programs differ
@@ -152,22 +164,50 @@ class Executor:
     # -- Alg. 1 lines 1-15: scaffold ------------------------------------
     def scaffold(self):
         """One scaffold sequence for single runs and campaigns; the
-        campaign overrides only the staging/init/restore hooks."""
+        campaign overrides only the staging/init/restore hooks. Each hook
+        runs under a flight-recorder span (stage/init/schedule/restore are
+        exactly the wall-clock sinks the report attributes outside the
+        launch loop)."""
         fl = self.job.fl
-        self.kv.set_process_phase(0)
-        self.nodes = [f"client_{i}" for i in range(fl.n_clients)]
-        for n in self.nodes:                 # "DownloadJobConfig <- True"
-            self.kv.set_node_stage(n, 1)
-        self._stage_data()
-        for n in self.nodes:
-            self.kv.set_node_stage(n, 2)
-        self._init_state()
-        if self.mode == "async":
-            self._build_schedule(fl.rounds)
-        self.round_idx = 0
-        self._maybe_restore()
-        self._post_restore()
+        rec, track = self.recorder, self.telemetry_track
+        with rec.span("scaffold", track=track):
+            self.kv.set_process_phase(0)
+            self.nodes = [f"client_{i}" for i in range(fl.n_clients)]
+            for n in self.nodes:             # "DownloadJobConfig <- True"
+                self.kv.set_node_stage(n, 1)
+            with rec.span("stage_data", track=track):
+                self._stage_data()
+            for n in self.nodes:
+                self.kv.set_node_stage(n, 2)
+            with rec.span("init_state", track=track):
+                self._init_state()
+            if self.mode == "async":
+                with rec.span("build_schedule", track=track):
+                    self._build_schedule(fl.rounds)
+            self.round_idx = 0
+            with rec.span("restore", track=track):
+                self._maybe_restore()
+            self._post_restore()
+            self._record_plane_bytes()
         return self
+
+    def _record_plane_bytes(self):
+        """Counter: device bytes staged per plane (data idx/len + roots,
+        async schedules, traced scalars). Computed from shapes/dtypes —
+        nothing is pulled back from device."""
+        rec = self.recorder
+        if not rec.enabled:
+            return
+
+        def nbytes(tree):
+            return int(sum(leaf.size * leaf.dtype.itemsize
+                           for leaf in jax.tree.leaves(tree)))
+
+        values = {"data_plane": nbytes(self.staged),
+                  "scalar_plane": nbytes(self.hyper)}
+        if getattr(self, "sched_dev", None) is not None:
+            values["schedule_plane"] = nbytes(self.sched_dev)
+        rec.counter("staged_bytes", track=self.telemetry_track, **values)
 
     def _stage_data(self):
         """"DownloadDataset": the one-time device staging of the full client
@@ -210,8 +250,26 @@ class Executor:
         """The shared chunked round loop (sync, async, and campaign
         execution all use it): per chunk, phase bookkeeping, one compiled
         launch (``launch(start, n) -> rows``, one metrics row per round),
-        then chunk-boundary host I/O (``_finish_chunk``)."""
+        then chunk-boundary host I/O (``_finish_chunk``). With telemetry
+        on, the loop runs inside its own quant-agg counter scope (runs in
+        one process can't bleed routing counts into each other) and the
+        run-level totals land as counters at the end."""
+        rec = self.recorder
+        if not rec.enabled:
+            return self._chunk_loop_inner(rounds, launch)
+        with kernel_ops.quant_agg_scope() as qframe:
+            out = self._chunk_loop_inner(rounds, launch)
+        rec.counter("quant_agg", track=self.telemetry_track,
+                    calls=qframe["calls"],
+                    batched_fallbacks=qframe["batched_fallbacks"])
+        rec.counter("programs", track=self.telemetry_track,
+                    compiled=self.compiled_programs())
+        rec.flush()
+        return out
+
+    def _chunk_loop_inner(self, rounds: int, launch):
         chunk = max(self.job.fl.rounds_per_launch, 1)
+        rec, track = self.recorder, self.telemetry_track
         while self.round_idx < rounds:
             start = self.round_idx
             n = min(chunk, rounds - start)
@@ -221,9 +279,47 @@ class Executor:
             for node in self.nodes:
                 self.kv.set_node_stage(node, 3)
             self.kv.set_process_phase(2)
-            rows = launch(start, n)
-            self._finish_chunk(start, n, rows)
+            with rec.span("chunk", track=track, start=start, n=n):
+                rows = self._recorded_launch(launch, start, n)
+                with rec.span("finish_chunk", track=track):
+                    self._finish_chunk(start, n, rows)
         return self.state, self.logger
+
+    def _recorded_launch(self, launch, start: int, n: int):
+        """One compiled launch under a "launch" span carrying the per-launch
+        telemetry: compile-count delta (jit-cache reading — a launch that
+        grew the cache is a cold/compile launch), quant-agg routing delta,
+        and the driver-specific attrs (lane occupancy for campaigns); host
+        RSS/CPU and lane counters sample after the launch. ``profile()``
+        wraps the launch in a jax.profiler capture when the job's
+        ``telemetry.profile_chunks`` lists this launch ordinal."""
+        rec = self.recorder
+        if not rec.enabled:
+            return launch(start, n)
+        ordinal = self._launches
+        self._launches += 1
+        progs0 = self.compiled_programs()
+        calls0 = kernel_ops.quant_agg_stats()["calls"]
+        with rec.profile(ordinal), \
+                rec.span("launch", track=self.telemetry_track,
+                         mode=self.mode, start=start, n=n,
+                         ordinal=ordinal) as sp:
+            rows = launch(start, n)
+            sp.attrs.update(
+                compile_delta=self.compiled_programs() - progs0,
+                quant_agg_traces=(kernel_ops.quant_agg_stats()["calls"]
+                                  - calls0),
+                **self._telemetry_attrs())
+        rec.counter("host", track=self.telemetry_track, **host_usage())
+        self._record_lane_telemetry()
+        return rows
+
+    def _telemetry_attrs(self) -> dict:
+        """Driver-specific launch-span attrs (campaigns: lane occupancy)."""
+        return {}
+
+    def _record_lane_telemetry(self):
+        """Post-launch counters hook (campaigns: per-shard lane alive)."""
 
     def _launch_sync(self, start: int, n: int):
         t0 = time.time()
@@ -279,12 +375,18 @@ class Executor:
         ledger record, eval (merged into the last round's row), logging,
         round-index advance, checkpoint-cadence save."""
         fl = self.job.fl
+        rec, track = self.recorder, self.telemetry_track
         for node in self.nodes:
             self.kv.set_node_stage(node, 4)
         last = start + n - 1
         if self.job.ledger is not None:
-            self._ledger_record(last)
-        self._merge_eval(rows)
+            with rec.span("ledger", track=track):
+                self._ledger_record(last)
+        if self.eval_fn is not None:
+            with rec.span("eval", track=track):
+                self._merge_eval(rows)
+        else:
+            self._merge_eval(rows)
         for i in range(n):
             self.logger.log_round(start + i, **rows[i])
         self.round_idx += n
@@ -293,8 +395,10 @@ class Executor:
         if self.ckpt_dir and fl.checkpoint_every and \
                 start // fl.checkpoint_every != \
                 self.round_idx // fl.checkpoint_every:
-            ckpt_mod.save(self.ckpt_dir, self.round_idx, self.state,
-                          extra=self._ckpt_extra(), async_write=False)
+            with rec.span("checkpoint_save", track=track,
+                          round=self.round_idx):
+                ckpt_mod.save(self.ckpt_dir, self.round_idx, self.state,
+                              extra=self._ckpt_extra(), async_write=False)
 
     def _ckpt_extra(self) -> dict:
         """Checkpoint manifest extras (campaigns add the lane count so a

@@ -42,6 +42,7 @@ from repro.core.jobs import rebind
 from repro.core.plan import build_plan
 from repro.runtime.campaign import (AppendTable, CampaignExecutor,
                                     write_parquet)
+from repro.telemetry.recorder import FlightRecorder
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +131,12 @@ class PlanExecutor:
                 "journal on resume, and without them previously dropped "
                 "lanes would silently resurrect")
         self.plan = build_plan(self.job.fl, self.job.sweep, self.job.arch)
+        # ONE shared flight recorder for the whole plan: each bucket's
+        # executor records onto its own track ("bucket<i>"), the lockstep
+        # loop onto "plan" — so the exported trace shows per-bucket launch
+        # lanes side by side under a single clock.
+        self.recorder = FlightRecorder.from_job(self.job,
+                                                fallback_dir=self.out_dir)
         self.execs: List[CampaignExecutor] = []
         for bucket in self.plan.buckets:
             sub = f"bucket{bucket.index}"
@@ -142,7 +149,8 @@ class PlanExecutor:
                           if self.ckpt_dir else None),
                 eval_fn=self.eval_fn, parquet=False,
                 lane_scheduling=self.scheduler is not None,
-                lane_devices=self.lane_devices)
+                lane_devices=self.lane_devices,
+                recorder=self.recorder, telemetry_track=sub)
             ex.scaffold()
             self.execs.append(ex)
         # a crash can leave buckets at different rounds; the lockstep loop
@@ -172,6 +180,7 @@ class PlanExecutor:
         # own chunk loop still does the per-chunk boundary I/O)
         chunk = (max(fl.rounds_per_launch, 1)
                  if self.scheduler is not None else rounds)
+        rec = self.recorder
         while self.round_idx < rounds:
             prev = self.round_idx
             n = min(chunk, rounds - prev)
@@ -180,12 +189,17 @@ class PlanExecutor:
                 ex.run(rounds=target)
             self.round_idx = target
             if self.scheduler is not None:
-                dropped = self._apply_decisions(target, prev, record=True)
-                self._journal_append(target, prev, dropped)
+                with rec.span("scheduler", track="plan", round=target):
+                    dropped = self._apply_decisions(target, prev,
+                                                    record=True)
+                    self._journal_append(target, prev, dropped)
             if self._table is not None:
-                self._table.flush(self.rows(), self._lead_columns())
+                with rec.span("table_flush", track="plan"):
+                    self._table.flush(self.rows(), self._lead_columns())
         if self.out_dir:
-            self._write_parquet()
+            with rec.span("parquet", track="plan"):
+                self._write_parquet()
+        rec.flush()
         return self
 
     # -- lane scheduling ---------------------------------------------------

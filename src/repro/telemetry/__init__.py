@@ -1,0 +1,18 @@
+"""Flight recorder — host-side observability for the FL drivers.
+
+The paper pitches the Performance Logger + FL-Dashboard as a first-class
+component; this package is that component grown into an *attribution* layer:
+nested monotonic-clock spans over the chunk-boundary seams of the sync,
+async, and campaign drivers (compile vs execute vs staging vs boundary I/O),
+per-launch counters (compile deltas, quant-agg routing, staged bytes, lane
+occupancy, host RSS/CPU), a ``telemetry.jsonl`` event stream per run dir,
+and a Chrome-trace/Perfetto exporter + terminal report
+(``python -m repro.telemetry.trace <run_dir>``).
+
+Everything here is host-side Python on the monotonic clock — zero
+device-side code — so the drivers' bitwise contracts hold with telemetry on
+or off (tests/test_telemetry.py asserts it for all three drivers).
+"""
+from repro.telemetry.recorder import FlightRecorder, read_events
+
+__all__ = ["FlightRecorder", "read_events"]

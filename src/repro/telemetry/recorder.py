@@ -1,0 +1,221 @@
+"""The flight recorder: nested spans + counters on the monotonic clock.
+
+Event model (one JSON object per ``telemetry.jsonl`` line):
+
+- ``{"kind": "meta", "schema": 1, "run": ..., "pid": ..., "unit": "us",
+   "clock": "perf_counter_ns"}`` — first line of every file.
+- ``{"kind": "span", "id": n, "parent": m|null, "depth": d, "name": ...,
+   "track": ..., "t0_us": ..., "dur_us": ..., "attrs": {...}}`` — a closed
+  span. IDs are assigned in *open* order and events are written in *close*
+  order, so nesting reconstructs deterministically from (id, parent, depth)
+  alone; wall times carry no ordering weight.
+- ``{"kind": "counter", "name": ..., "track": ..., "t_us": ...,
+   "values": {...}}`` — a point sample (staged bytes, lane occupancy,
+  host RSS/CPU, quant-agg routing totals).
+
+``track`` names the Perfetto track the event renders on: ``"run"`` for a
+single executor, ``bucket<i>`` per planner bucket, ``"plan"`` for the
+lockstep scheduler. Spans on one track nest by time containment (same tid),
+which is exactly how Perfetto draws flame stacks.
+
+A disabled recorder is a no-op: ``span()`` hands back a shared null context
+and ``counter()`` returns immediately — the instrumented drivers pay a
+dict-lookup per chunk boundary, nothing per round. Timing uses
+``time.perf_counter_ns`` (monotonic); nothing here touches device code, so
+telemetry cannot perturb compiled-program numerics.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+
+class Span:
+    """An open span; ``attrs`` may be updated until the ``with`` exits.
+
+    Its own context manager (not a ``contextlib`` generator): the chunk
+    loop opens several spans per chunk boundary, and the hand-rolled
+    ``__enter__``/``__exit__`` pair keeps that on the right side of the
+    recorder's <=5% overhead budget."""
+    __slots__ = ("name", "track", "attrs", "id", "parent", "depth", "_t0",
+                 "_rec")
+
+    def __init__(self, rec, name, track, attrs, sid, parent, depth, t0):
+        self.name, self.track, self.attrs = name, track, attrs
+        self.id, self.parent, self.depth = sid, parent, depth
+        self._t0 = t0
+        self._rec = rec
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        rec = self._rec
+        rec._stack.pop()
+        rec._emit({"kind": "span", "id": self.id, "parent": self.parent,
+                   "depth": self.depth, "name": self.name,
+                   "track": self.track, "t0_us": self._t0,
+                   "dur_us": rec._now_us() - self._t0,
+                   "attrs": dict(self.attrs)})
+        if not rec._stack:
+            rec.flush()
+        return False
+
+
+class _NullSpan:
+    """Stand-in yielded by a disabled recorder: accepts (and discards)
+    ``attrs`` updates so instrumentation sites need no enabled-checks."""
+    __slots__ = ()
+
+    @property
+    def attrs(self):
+        return {}
+
+
+class _NullCtx:
+    __slots__ = ()
+
+    def __enter__(self):
+        return _NULL_SPAN
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+_NULL_CTX = _NullCtx()
+
+
+class FlightRecorder:
+    """Host-side span/counter recorder streaming to ``telemetry.jsonl``.
+
+    ``out_dir=None`` keeps events in memory only (``self.events``); with an
+    out_dir the file is truncated on the recorder's first write (one file
+    per recorder lifetime) and appended per event, flushed whenever the
+    span stack empties. ``profile_chunks`` lists launch ordinals to wrap in
+    a ``jax.profiler.trace`` capture (written under ``out_dir/jax_profile``).
+    """
+
+    def __init__(self, out_dir=None, run_name: str = "run",
+                 enabled: bool = True, profile_chunks=()):
+        self.enabled = enabled
+        self.run_name = run_name
+        self.out_dir = pathlib.Path(out_dir) if out_dir else None
+        self.profile_chunks = frozenset(int(c) for c in profile_chunks)
+        self.events: list = []
+        self._stack: list = []
+        self._pending: list = []       # emitted, not yet serialized
+        self._next_id = 0
+        self._t0_ns = time.perf_counter_ns()
+        self._fh = None
+        self._profile_warned = False
+
+    @classmethod
+    def from_job(cls, job, fallback_dir=None) -> "FlightRecorder":
+        """Build from a job's ``telemetry:`` section (validated by
+        ``core/jobs.load_job``). No section, or ``enabled: false`` -> a
+        no-op recorder; an enabled section without ``out_dir`` falls back
+        to the executor's run dir (events stay in memory if neither)."""
+        t = (getattr(job, "raw", None) or {}).get("telemetry") or {}
+        enabled = bool(t) and bool(t.get("enabled", True))
+        return cls(
+            out_dir=(t.get("out_dir") or fallback_dir) if enabled else None,
+            run_name=getattr(job, "name", "run"), enabled=enabled,
+            profile_chunks=t.get("profile_chunks") or ())
+
+    # -- clock ------------------------------------------------------------
+    def _now_us(self) -> int:
+        return (time.perf_counter_ns() - self._t0_ns) // 1000
+
+    # -- spans ------------------------------------------------------------
+    def span(self, name: str, track: str = "run", **attrs):
+        if not self.enabled:
+            return _NULL_CTX
+        stack = self._stack
+        sp = Span(self, name, track, attrs, self._next_id,
+                  stack[-1].id if stack else None, len(stack),
+                  self._now_us())
+        self._next_id += 1
+        stack.append(sp)
+        return sp
+
+    def counter(self, name: str, track: str = "run", **values):
+        if not self.enabled:
+            return
+        self._emit({"kind": "counter", "name": name, "track": track,
+                    "t_us": self._now_us(), "values": values})
+
+    def profile(self, ordinal: int):
+        """``jax.profiler`` capture context for launch ``ordinal`` when the
+        ``profile_chunks`` knob lists it (else a no-op context). Capture
+        failures degrade to a one-time warning — profiling is a debugging
+        aid, never a run dependency."""
+        if not self.enabled or ordinal not in self.profile_chunks:
+            return _NULL_CTX
+        try:
+            import jax
+            d = (self.out_dir or pathlib.Path(".")) / "jax_profile"
+            d.mkdir(parents=True, exist_ok=True)
+            return jax.profiler.trace(str(d))
+        except Exception as e:                        # pragma: no cover
+            if not self._profile_warned:
+                import warnings
+                warnings.warn(f"jax.profiler capture unavailable ({e!r}); "
+                              "profile_chunks ignored", stacklevel=2)
+                self._profile_warned = True
+            return _NULL_CTX
+
+    # -- persistence ------------------------------------------------------
+    def _emit(self, event: dict):
+        """Record an event; serialization is deferred to ``flush()`` (the
+        steady-state cost of an event is two list appends)."""
+        self.events.append(event)
+        if self.out_dir is not None:
+            self._pending.append(event)
+
+    def flush(self):
+        """Serialize + write everything emitted since the last flush (one
+        write call), and push it to the OS. Fired whenever the span stack
+        empties — i.e. per chunk boundary — so a crash loses at most the
+        open chunk's events."""
+        if not self._pending:
+            return
+        if self._fh is None:
+            self.out_dir.mkdir(parents=True, exist_ok=True)
+            self._fh = open(self.out_dir / "telemetry.jsonl", "w")
+            self._fh.write(json.dumps(
+                {"kind": "meta", "schema": 1, "run": self.run_name,
+                 "pid": os.getpid(), "unit": "us",
+                 "clock": "perf_counter_ns"}) + "\n")
+        self._fh.write("".join(
+            json.dumps(e, separators=(",", ":")) + "\n"
+            for e in self._pending))
+        self._pending.clear()
+        self._fh.flush()
+
+    def close(self):
+        self.flush()
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __del__(self):                                # pragma: no cover
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def read_events(path) -> list:
+    """Parse a ``telemetry.jsonl`` (or a run dir containing one) back into
+    event dicts — the single parser the exporter, report, and tests use."""
+    p = pathlib.Path(path)
+    if p.is_dir():
+        p = p / "telemetry.jsonl"
+    if not p.exists():
+        raise FileNotFoundError(
+            f"no telemetry.jsonl at {p} — was the run's job missing a "
+            "telemetry: {enabled: true, out_dir: ...} section?")
+    return [json.loads(line) for line in p.read_text().splitlines() if line]

@@ -1,0 +1,337 @@
+"""Flight recorder tests (repro/telemetry) + observability satellites.
+
+The load-bearing contract is *bitwise invariance*: the recorder is pure
+host-side bookkeeping, so running any driver (sync, async, campaign) with
+telemetry on must produce bit-identical params to the same run with it off.
+On top of that: span nesting is deterministic (IDs in open order, events in
+close order — structure reconstructs from (id, parent, depth) with no
+timestamp tie-breaks), the JSONL stream round-trips, the Chrome-trace
+export is Perfetto-shaped (M/X/C events, one pid per track, time
+containment on a shared tid), and the report collates a
+compile/execute/stage/io breakdown. Satellites: ``PerformanceLogger.to_csv``
+without out_dir, ``ru_maxrss`` platform units, scoped quant-agg counters,
+and the job-loader's telemetry-section validation.
+"""
+import json
+import os
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.jobs import load_job
+from repro.kernels import ops as kernel_ops
+from repro.metrics import logger as logger_mod
+from repro.metrics.logger import PerformanceLogger
+from repro.runtime.campaign import CampaignExecutor
+from repro.runtime.executor import Executor
+from repro.telemetry.recorder import FlightRecorder, read_events
+from repro.telemetry.trace import export, report, to_chrome_trace
+
+
+def _raw(*, mode="sync", rounds=4, chunk=2, sweep=None, telemetry=None,
+         seed=3):
+    tp = {"n_clients": 4, "local_epochs": 1, "client_lr": 0.1,
+          "rounds": rounds, "seed": seed, "rounds_per_launch": chunk}
+    runtime = {"straggler_prob": 0.2, "straggler_overprovision": 1.25}
+    if mode == "async":
+        tp.update({"mode": "async", "async_buffer": 3, "max_staleness": 4,
+                   "staleness_exponent": 0.5})
+        runtime = {"straggler_prob": 0.2, "duration_sigma": 0.25}
+    raw = {
+        "name": "telemetry-test",
+        "model": {"arch": "flsim-mlp"},
+        "dataset": {"dataset": "synthetic_vision", "n_items": 128,
+                    "distribution": {"partition": "dirichlet",
+                                     "dirichlet_alpha": 0.5}},
+        "strategy": {"strategy": "fedavg", "train_params": tp},
+        "runtime": runtime,
+    }
+    if sweep:
+        raw["sweep"] = sweep
+    if telemetry is not None:
+        raw["telemetry"] = telemetry
+    return raw
+
+
+def _params(state):
+    return jax.tree.map(np.asarray, state["params"])
+
+
+def _assert_bitwise_equal(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# satellites: logger fixes
+# ---------------------------------------------------------------------------
+
+def test_to_csv_explicit_path_without_out_dir(tmp_path):
+    """out_dir=None + explicit path works; no path at all fails loudly
+    (it used to crash with TypeError deep in pathlib)."""
+    lg = PerformanceLogger()
+    lg.log_round(0, loss=1.0)
+    out = lg.to_csv(tmp_path / "run.csv")
+    assert out.exists()
+    rows = out.read_text().splitlines()
+    assert len(rows) == 2 and "loss" in rows[0]
+    with pytest.raises(ValueError, match="explicit path"):
+        lg.to_csv()
+
+
+def test_rss_mb_platform_units(monkeypatch):
+    """ru_maxrss is KB on Linux but BYTES on macOS — the same 512 MiB peak
+    must read 512 on both."""
+    monkeypatch.setattr(logger_mod.sys, "platform", "linux")
+    assert logger_mod._rss_mb(512 * 1024) == 512.0
+    monkeypatch.setattr(logger_mod.sys, "platform", "darwin")
+    assert logger_mod._rss_mb(512 * 2**20) == 512.0
+
+
+def test_host_usage_keys():
+    u = logger_mod.host_usage()
+    assert set(u) == {"cpu_s", "max_rss_mb"}
+    assert u["cpu_s"] > 0 and u["max_rss_mb"] > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: scoped quant-agg counters
+# ---------------------------------------------------------------------------
+
+def test_quant_agg_scope_isolates_and_nests():
+    kernel_ops.reset_quant_agg_stats()
+    kernel_ops._quant_agg_bump("calls")
+    assert kernel_ops.quant_agg_stats()["calls"] == 1
+    with kernel_ops.quant_agg_scope() as outer:
+        kernel_ops._quant_agg_bump("calls")
+        with kernel_ops.quant_agg_scope() as inner:
+            kernel_ops._quant_agg_bump("calls")
+            # innermost frame is the live snapshot view
+            assert kernel_ops.quant_agg_stats()["calls"] == 1
+        assert inner["calls"] == 1
+        assert outer["calls"] == 2          # increments propagate outward
+        assert kernel_ops.quant_agg_stats()["calls"] == 2
+    # the process-global frame saw everything (legacy semantics outside
+    # any scope: reset + read keep working as before)
+    assert kernel_ops.quant_agg_stats()["calls"] == 3
+    kernel_ops.reset_quant_agg_stats()
+    assert kernel_ops.quant_agg_stats()["calls"] == 0
+
+
+# ---------------------------------------------------------------------------
+# recorder core: determinism, round-trip, disabled path
+# ---------------------------------------------------------------------------
+
+def _record_fixture(rec):
+    with rec.span("scaffold"):
+        with rec.span("stage_data"):
+            pass
+        with rec.span("init_state"):
+            pass
+    with rec.span("chunk", start=0, n=2):
+        with rec.span("launch", ordinal=0) as sp:
+            sp.attrs.update(compile_delta=1)
+        with rec.span("finish_chunk"):
+            pass
+    rec.counter("staged_bytes", data_plane=1024, scalar_plane=64)
+
+
+def _structure(events):
+    return [(e["id"], e["parent"], e["depth"], e["name"], e["track"])
+            for e in events if e["kind"] == "span"]
+
+
+def test_span_structure_deterministic():
+    """Two identical recordings agree on every structural field — nesting
+    reconstructs from (id, parent, depth), never from timestamps."""
+    recs = [FlightRecorder(), FlightRecorder()]
+    for rec in recs:
+        _record_fixture(rec)
+    s1, s2 = _structure(recs[0].events), _structure(recs[1].events)
+    assert s1 == s2
+    # the fixture's shape: scaffold(2 children) then chunk(2 children)
+    assert s1[0] == (1, 0, 1, "stage_data", "run")
+    assert [n for (_, _, _, n, _) in s1] == [
+        "stage_data", "init_state", "scaffold",
+        "launch", "finish_chunk", "chunk"]   # close order, parents last
+    launch = next(e for e in recs[0].events
+                  if e.get("name") == "launch")
+    assert launch["attrs"] == {"ordinal": 0, "compile_delta": 1}
+
+
+def test_jsonl_roundtrip(tmp_path):
+    rec = FlightRecorder(out_dir=tmp_path, run_name="rt")
+    _record_fixture(rec)
+    rec.close()
+    events = read_events(tmp_path)
+    assert events[0]["kind"] == "meta"
+    assert events[0]["run"] == "rt" and events[0]["schema"] == 1
+    assert events[1:] == rec.events          # file == memory, in order
+    with pytest.raises(FileNotFoundError, match="telemetry.jsonl"):
+        read_events(tmp_path / "nope")
+
+
+def test_disabled_recorder_is_inert(tmp_path):
+    rec = FlightRecorder(out_dir=tmp_path, enabled=False)
+    with rec.span("launch") as sp:
+        sp.attrs.update(ignored=True)        # null span discards updates
+        rec.counter("host", cpu_s=1.0)
+    assert rec.events == []
+    assert not (tmp_path / "telemetry.jsonl").exists()
+
+
+def test_from_job_section_gates_recorder(tmp_path):
+    on = FlightRecorder.from_job(
+        load_job(_raw(telemetry={"out_dir": str(tmp_path)})))
+    off = FlightRecorder.from_job(load_job(_raw()))
+    killed = FlightRecorder.from_job(
+        load_job(_raw(telemetry={"enabled": False,
+                                 "out_dir": str(tmp_path)})))
+    assert on.enabled and str(on.out_dir) == str(tmp_path)
+    assert not off.enabled and not killed.enabled
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export shape
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_shape():
+    rec = FlightRecorder()
+    _record_fixture(rec)
+    rec.counter("lane_occupancy", track="bucket0", alive=3, total=4)
+    tr = to_chrome_trace(rec.events)
+    assert set(tr) == {"traceEvents", "displayTimeUnit"}
+    evs = tr["traceEvents"]
+    by_ph = {}
+    for e in evs:
+        by_ph.setdefault(e["ph"], []).append(e)
+    # one process_name + one thread_name metadata pair per track
+    names = {e["args"]["name"] for e in by_ph["M"]
+             if e["name"] == "process_name"}
+    assert names == {"run", "bucket0"}
+    # every span is a complete event with its own duration
+    assert len(by_ph["X"]) == 6
+    for e in by_ph["X"]:
+        assert e["tid"] == 1 and e["dur"] >= 0 and "ts" in e
+    # children are time-contained in their parent (what Perfetto nests on)
+    x = {e["args"]["span_id"]: e for e in by_ph["X"]}
+    spans = {e["id"]: e for e in rec.events if e["kind"] == "span"}
+    for sid, ev in spans.items():
+        if ev["parent"] is not None:
+            par = x[ev["parent"]]
+            assert par["ts"] <= x[sid]["ts"]
+            assert x[sid]["ts"] + x[sid]["dur"] <= par["ts"] + par["dur"]
+    # counters keep only numeric values
+    assert {e["name"] for e in by_ph["C"]} == {"staged_bytes",
+                                               "lane_occupancy"}
+
+
+# ---------------------------------------------------------------------------
+# bitwise on/off invariance — all three drivers
+# ---------------------------------------------------------------------------
+
+def test_sync_bitwise_with_telemetry(tmp_path):
+    s_off, _ = Executor(load_job(_raw())).scaffold().run()
+    ex = Executor(load_job(_raw(
+        telemetry={"out_dir": str(tmp_path)}))).scaffold()
+    s_on, _ = ex.run()
+    _assert_bitwise_equal(_params(s_off), _params(s_on))
+    names = {e["name"] for e in ex.recorder.events if e["kind"] == "span"}
+    assert {"scaffold", "stage_data", "init_state", "chunk", "launch",
+            "finish_chunk"} <= names
+    launches = [e for e in ex.recorder.events if e.get("name") == "launch"]
+    assert len(launches) == 2                # 4 rounds / chunk=2
+    assert launches[0]["attrs"]["compile_delta"] >= 1    # cold
+    assert launches[1]["attrs"]["compile_delta"] == 0    # warm
+    assert (tmp_path / "telemetry.jsonl").exists()
+
+
+def test_async_bitwise_with_telemetry(tmp_path):
+    s_off, _ = Executor(load_job(_raw(mode="async"))).scaffold().run()
+    ex = Executor(load_job(_raw(
+        mode="async", telemetry={"out_dir": str(tmp_path)}))).scaffold()
+    s_on, _ = ex.run()
+    _assert_bitwise_equal(_params(s_off), _params(s_on))
+    names = {e["name"] for e in ex.recorder.events if e["kind"] == "span"}
+    assert "build_schedule" in names
+    planes = next(e for e in ex.recorder.events
+                  if e.get("name") == "staged_bytes")
+    assert planes["values"]["schedule_plane"] > 0
+
+
+def test_campaign_bitwise_with_telemetry(tmp_path):
+    sweep = {"seeds": [3, 5]}
+    c_off = CampaignExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    c_off.run()
+    c_on = CampaignExecutor(load_job(_raw(
+        sweep=sweep, telemetry={"out_dir": str(tmp_path)}))).scaffold()
+    c_on.run()
+    for s in range(2):
+        _assert_bitwise_equal(c_off.trajectory_params(s),
+                              c_on.trajectory_params(s))
+    launches = [e for e in c_on.recorder.events if e.get("name") == "launch"]
+    assert launches and all(
+        e["attrs"]["n_alive"] == 2 and e["attrs"]["S"] == 2
+        for e in launches)
+    occ = [e for e in c_on.recorder.events
+           if e.get("name") == "lane_occupancy"]
+    assert occ and occ[-1]["values"] == {"alive": 2, "total": 2}
+    quant = next(e for e in c_on.recorder.events
+                 if e.get("name") == "quant_agg")
+    assert quant["values"]["calls"] == 0     # fedavg float path
+
+
+# ---------------------------------------------------------------------------
+# export + report end-to-end, per-bucket tracks under the planner
+# ---------------------------------------------------------------------------
+
+def test_export_and_report_end_to_end(tmp_path):
+    ex = Executor(load_job(_raw(
+        telemetry={"out_dir": str(tmp_path)}))).scaffold()
+    ex.run()
+    ex.recorder.close()
+    trace_path = export(tmp_path)
+    tr = json.loads(trace_path.read_text())
+    assert any(e["ph"] == "X" and e["name"] == "launch"
+               for e in tr["traceEvents"])
+    text = report(tmp_path)
+    for word in ("compile", "execute", "stage", "telemetry-test",
+                 "launches"):
+        assert word in text
+
+
+def test_plan_executor_per_bucket_tracks(tmp_path):
+    from repro.runtime.scheduler import PlanExecutor
+    sweep = {"strategy": ["fedavg", "fedprox"], "seeds": [3, 5]}
+    pe = PlanExecutor(load_job(_raw(
+        sweep=sweep, rounds=2,
+        telemetry={"out_dir": str(tmp_path / "t")})),
+        out_dir=str(tmp_path / "out")).scaffold()
+    pe.run()
+    pe.recorder.close()
+    events = read_events(tmp_path / "t")
+    tracks = {e.get("track") for e in events} - {None}
+    assert {"bucket0", "bucket1", "plan"} <= tracks
+    # one shared recorder: bucket spans interleave in one id space
+    ids = [e["id"] for e in events if e.get("kind") == "span"]
+    assert len(ids) == len(set(ids))
+    assert any(e.get("name") == "table_flush" and e["track"] == "plan"
+               for e in events)
+    tr = to_chrome_trace(events)
+    procs = {e["args"]["name"] for e in tr["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"bucket0", "bucket1", "plan"} <= procs
+
+
+# ---------------------------------------------------------------------------
+# satellite: job-loader telemetry section validation
+# ---------------------------------------------------------------------------
+
+def test_telemetry_section_typo_fails_with_hint():
+    with pytest.raises(KeyError, match="did you mean 'out_dir'"):
+        load_job(_raw(telemetry={"out_dirr": "/tmp/x"}))
+    with pytest.raises(KeyError, match="telemetry"):
+        load_job(dict(_raw(), telemetryy={"out_dir": "/tmp/x"}))
