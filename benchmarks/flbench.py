@@ -681,6 +681,109 @@ def bench_telemetry(arch: str = "flsim-logreg", n_traj: int = 8,
     return results
 
 
+def bench_probes(arch: str = "flsim-logreg", n_traj: int = 8,
+                 n_clients: int = 8, rounds: int = 16, chunk: int = 1,
+                 local_epochs: int = 4, n_items: int = 1024, seed: int = 0,
+                 reps: int = 4, artifact_dir: str = "probes_smoke",
+                 out_path: str = "BENCH_probes.json"):
+    """Round-probe overhead on the S=8 seed sweep grid at chunk=1 — the
+    probe plane's worst case: probes ride the scan as extra outputs, and
+    every round is a chunk boundary, so the drain (counter back-dating +
+    probes.csv flush) fires at its maximum rate relative to useful work.
+
+    ``local_epochs=4`` keeps the per-round *useful* work representative: a
+    federated round canonically runs several local epochs per client
+    (FedAvg's E), and the probe reductions are a fixed per-round cost —
+    one extra pass over the already-materialized deltas regardless of how
+    much training produced them. Benching against a one-batch round would
+    measure the probes against a round that does almost nothing, which is
+    the one configuration no real campaign uses.
+
+    The same campaign runs twice — probes+telemetry off and on (probes are
+    an observability feature: the realistic "on" cost includes the flight
+    recorder that receives them) — with a warm-up chunk each (compile
+    excluded) and timed regions interleaved over ``reps`` repetitions,
+    reporting each mode's best. The two runs are bitwise-identical in
+    params by the probe plane's contract; the gate (benchmarks/report.py:
+    ``speedup_on_vs_off >= 0.9``) is the ISSUE's <=10% overhead budget.
+    Also exports ``artifact_dir``'s Chrome trace (per-lane probe counter
+    tracks) + probes.csv, the CI smoke artifacts. Writes ``out_path``."""
+    import json
+
+    from repro.core.jobs import load_job
+    from repro.runtime.campaign import CampaignExecutor
+    from repro.telemetry import trace as trace_mod
+
+    assert rounds % chunk == 0, \
+        "rounds must be a multiple of chunk (keeps the timed region free " \
+        "of remainder-length compiles)"
+
+    def raw(probes=False):
+        r = {
+            "name": "bench-probes",
+            "model": {"arch": arch},
+            "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                        "distribution": {"partition": "dirichlet",
+                                         "dirichlet_alpha": 0.5}},
+            "strategy": {"strategy": "fedavg",
+                         "train_params": {"n_clients": n_clients,
+                                          "local_epochs": local_epochs,
+                                          "client_lr": 0.1,
+                                          "rounds": chunk + reps * rounds,
+                                          "seed": seed,
+                                          "rounds_per_launch": chunk}},
+            "sweep": {"seeds": [seed + s for s in range(n_traj)]},
+        }
+        if probes:
+            r["probes"] = {"enabled": True, "out_dir": artifact_dir}
+            r["telemetry"] = {"out_dir": artifact_dir}
+        return r
+
+    results = {"config": {"arch": arch, "n_traj": n_traj,
+                          "n_clients": n_clients, "rounds": rounds,
+                          "chunk": chunk, "reps": reps, "n_items": n_items,
+                          "seed": seed, "backend": jax.default_backend()},
+               "runs": {}}
+
+    off = CampaignExecutor(load_job(raw())).scaffold()
+    on = CampaignExecutor(load_job(raw(probes=True))).scaffold()
+    off.run(rounds=chunk)                    # warm-up: compile + stage
+    on.run(rounds=chunk)
+    dt_off = dt_on = float("inf")
+    for rep in range(reps):
+        upto = chunk + (rep + 1) * rounds
+        t0 = time.time()
+        off.run(rounds=upto)
+        dt_off = min(dt_off, time.time() - t0)
+        t0 = time.time()
+        on.run(rounds=upto)
+        dt_on = min(dt_on, time.time() - t0)
+    on.recorder.close()
+
+    traj_rounds = n_traj * rounds
+    for name, dt in (("probes_off", dt_off), ("probes_on", dt_on)):
+        results["runs"][name] = {
+            "trajectories": n_traj, "rounds": rounds, "wall_s": dt,
+            "traj_rounds_per_s": traj_rounds / dt,
+            "s_per_traj_round": dt / traj_rounds}
+    speedup = dt_off / dt_on
+    results["speedup_on_vs_off"] = speedup
+    results["probe_rows"] = len(on.probe_rows)
+    for name in ("probes_off", "probes_on"):
+        r = results["runs"][name]
+        print(f"probes_{name},{r['s_per_traj_round']*1e6:.0f},"
+              f"traj_rounds_per_s={r['traj_rounds_per_s']:.2f};"
+              f"speedup={speedup if name == 'probes_on' else 1.0:.2f}")
+    if artifact_dir:
+        trace_path = trace_mod.export(artifact_dir)
+        print(f"trace: {trace_path}")
+        print(trace_mod.report(artifact_dir))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run_fl(fl: FLConfig, arch: str = "flsim-cnn", n_items: int = 768,
            rounds: int = 8, batch: int = 16, steps: int = 1,
            eval_n: int = 256, arch_cfg=None, run_name: str = "run"):

@@ -30,15 +30,55 @@ BENCH_CONTRACTS = {
                     lambda r: r["speedup_sharded_vs_vmapped"]),
     "BENCH_agg": (1.5, "fused int8 aggregation vs dequant-first",
                   lambda r: r["speedup_fused_vs_dequant"]),
-    # an overhead budget, not a speedup claim: 0.95x = the flight recorder
-    # may cost at most 5% on the chunk=1 worst case
+    # overhead budgets, not speedup claims: 0.95x = the flight recorder
+    # may cost at most 5% on the chunk=1 worst case; 0.9x = probes (which
+    # ride the scan *and* feed the recorder) at most 10%
     "BENCH_telemetry": (0.95,
                         "campaign with flight recorder vs telemetry off",
                         lambda r: r["speedup_on_vs_off"]),
+    "BENCH_probes": (0.9,
+                     "campaign with round probes + recorder vs both off",
+                     lambda r: r["speedup_on_vs_off"]),
 }
 
 
-def bench_gate(bench_dir=".", only=None) -> int:
+def bench_records(bench_dir=".", only=None) -> list:
+    """Score each contract into a record dict: the single source both the
+    markdown table and ``--json`` render. ``margin`` is measured/floor — 1
+    (how much headroom is left; negative = below floor)."""
+    if only is not None:
+        unknown = [o for o in only
+                   if f"BENCH_{o}" not in BENCH_CONTRACTS]
+        if unknown:
+            raise KeyError(f"unknown bench contract(s) {unknown}; known: "
+                           f"{[s[6:] for s in BENCH_CONTRACTS]}")
+    records = []
+    for stem, (floor, claim, read) in BENCH_CONTRACTS.items():
+        if only is not None and stem[6:] not in only:
+            continue
+        rec = {"artifact": stem, "claim": claim, "floor": floor,
+               "measured": None, "margin": None}
+        path = pathlib.Path(bench_dir) / f"{stem}.json"
+        if not path.exists():
+            # a gate invoked with --only asserts its job just measured
+            # these — a missing artifact there is a violation (a bench
+            # that exited 0 without writing must not green-light CI),
+            # while the bare gate merely reports coverage
+            rec["status"] = ("fail (not measured)" if only is not None
+                             else "skipped (no artifact)")
+        else:
+            try:
+                rec["measured"] = float(read(json.loads(path.read_text())))
+                rec["margin"] = rec["measured"] / floor - 1.0
+                rec["status"] = ("pass" if rec["measured"] >= floor
+                                 else "fail")
+            except (KeyError, ValueError, TypeError) as e:
+                rec["status"] = f"fail (unreadable: {e!r})"
+        records.append(rec)
+    return records
+
+
+def bench_gate(bench_dir=".", only=None, as_json=False) -> int:
     """Collate BENCH_*.json into a markdown table and enforce the floors.
 
     Returns the number of violations (the CLI exits 1 if any). ``only`` names
@@ -47,47 +87,27 @@ def bench_gate(bench_dir=".", only=None) -> int:
     also *commits* BENCH_*.json as the recorded perf trajectory, so after
     checkout every artifact exists and a gate without ``only`` would score
     stale committed numbers a job never reproduced. Artifacts absent from
-    ``bench_dir`` are reported as skipped, not failed."""
-    rows, bad = [], 0
-    if only is not None:
-        unknown = [o for o in only
-                   if f"BENCH_{o}" not in BENCH_CONTRACTS]
-        if unknown:
-            raise KeyError(f"unknown bench contract(s) {unknown}; known: "
-                           f"{[s[6:] for s in BENCH_CONTRACTS]}")
-    for stem, (floor, claim, read) in BENCH_CONTRACTS.items():
-        if only is not None and stem[6:] not in only:
-            continue
-        path = pathlib.Path(bench_dir) / f"{stem}.json"
-        if not path.exists():
-            # a gate invoked with --only asserts its job just measured
-            # these — a missing artifact there is a violation (a bench
-            # that exited 0 without writing must not green-light CI),
-            # while the bare gate merely reports coverage
-            if only is not None:
-                bad += 1
-                rows.append(f"| {stem} | {claim} | missing | "
-                            f"≥{floor:.1f}x | **FAIL** (not measured) |")
-            else:
-                rows.append(f"| {stem} | {claim} | — | ≥{floor:.1f}x "
-                            "| skipped (no artifact) |")
-            continue
-        try:
-            speedup = float(read(json.loads(path.read_text())))
-        except (KeyError, ValueError, TypeError) as e:
-            bad += 1
-            rows.append(f"| {stem} | {claim} | unreadable ({e!r}) "
-                        f"| ≥{floor:.1f}x | **FAIL** |")
-            continue
-        ok = speedup >= floor
-        bad += 0 if ok else 1
-        rows.append(f"| {stem} | {claim} | {speedup:.2f}x | ≥{floor:.1f}x "
-                    f"| {'pass' if ok else '**FAIL**'} |")
+    ``bench_dir`` are reported as skipped, not failed. ``as_json`` prints
+    the records as JSON on stdout instead of the table (the step-summary
+    markdown still renders either way)."""
+    records = bench_records(bench_dir, only=only)
+    bad = sum(1 for r in records if r["status"].startswith("fail"))
+    rows = []
+    for r in records:
+        measured = (f"{r['measured']:.2f}x" if r["measured"] is not None
+                    else "—")
+        margin = (f"{100 * r['margin']:+.0f}%" if r["margin"] is not None
+                  else "—")
+        status = ("**FAIL**" + r["status"][4:]
+                  if r["status"].startswith("fail") else r["status"])
+        rows.append(f"| {r['artifact']} | {r['claim']} | {measured} | "
+                    f"≥{r['floor']:.2f}x | {margin} | {status} |")
     table = "\n".join(
         ["## Benchmark speedup contracts\n",
-         "| artifact | claim | measured | floor | status |",
-         "|---|---|---|---|---|", *rows])
-    print(table)
+         "| artifact | claim | measured | floor | margin | status |",
+         "|---|---|---|---|---|---|", *rows])
+    print(json.dumps({"violations": bad, "contracts": records}, indent=2)
+          if as_json else table)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:
         with open(summary, "a") as f:
@@ -153,23 +173,26 @@ if __name__ == "__main__":
     # bench gate: python -m benchmarks.report bench [--only a,b,...] [dir]
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     if which == "bench":
-        only, bench_dir = None, "."
+        only, bench_dir, as_json = None, ".", False
+        usage = ("usage: benchmarks.report bench [--only a,b,...] "
+                 "[--json] [dir]")
         rest = sys.argv[2:]
         while rest:
             tok = rest.pop(0)
             if tok == "--only":
                 if not rest:
-                    sys.exit("usage: benchmarks.report bench "
-                             "[--only a,b,...] [dir]")
+                    sys.exit(usage)
                 only = rest.pop(0).split(",")
+            elif tok == "--json":
+                as_json = True
             elif tok.startswith("-"):
                 # a typo'd flag must not silently become bench_dir and
                 # un-scope the gate
-                sys.exit(f"unknown option {tok!r}; usage: "
-                         "benchmarks.report bench [--only a,b,...] [dir]")
+                sys.exit(f"unknown option {tok!r}; {usage}")
             else:
                 bench_dir = tok
-        sys.exit(1 if bench_gate(bench_dir, only=only) else 0)
+        sys.exit(1 if bench_gate(bench_dir, only=only, as_json=as_json)
+                 else 0)
     if which in ("all", "dryrun"):
         print("## Dry-run\n")
         print(dryrun_table())

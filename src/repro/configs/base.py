@@ -212,6 +212,10 @@ class FLConfig:
     drop_tolerance: float = 0.0       # fraction of clients allowed to drop per round
     checkpoint_every: int = 0
     blockchain: str = "none"          # none | hashchain
+    # async-mode ledger digest cadence: every this-many server events the
+    # chunk loop appends a consensus digest block (0 = off). Evaluated at
+    # chunk boundaries; recorded as a "digest" span + counter.
+    digest_every_events: int = 0
     rounds: int = 10
 
 

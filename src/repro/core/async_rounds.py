@@ -40,9 +40,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import determinism, packing
+from repro.core import probes as probelib
 from repro.core.rounds import bind_hyper, freeze_unless, local_train, \
     pop_alive
-from repro.core.strategy import Strategy, tree_add, tree_scale, tree_zeros_like
+from repro.core.strategy import Strategy, tree_add, tree_scale, tree_sub, \
+    tree_zeros_like
 from repro.data.pipeline import gather_one_client_batch
 from repro.sharding.axes import AxisCtx
 
@@ -81,7 +83,8 @@ def async_init_state(state: dict, ring: int, fl: FLConfig = None,
 
 
 def build_async_multi(model, strategy: Strategy, fl: FLConfig,
-                      batch_size=None):
+                      batch_size=None, probes: bool = False,
+                      on_divergence: str = "report"):
     """Fuse ``n_events`` server events into one compiled program.
 
     Returns ``multi_fn(ctx, state, staged, sched, root, start_event,
@@ -92,11 +95,20 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
     come back stacked with a leading ``n_events`` dim.
 
     ``state`` needs the async carries from ``async_init_state``.
+
+    ``probes`` (trace-time flag, see ``build_spatial_round``) adds a
+    ``metrics["probes"]`` dict per event: ``update_norm`` (0 for buffered
+    non-apply events), ``drift_norm`` = ||stale snapshot - server params||
+    (staleness in parameter space), ``participation``/``masked_frac`` from
+    the schedule's accept bit, ``sat_frac`` on the packed path, and the
+    NaN/Inf ``nonfinite`` sentinel (with the opt-in ``on_divergence:
+    "freeze"`` select).
     """
     batch_size = batch_size or fl.batch_size
     steps = max(fl.local_steps, 1)
     fedbuff = max(fl.async_buffer, 1) > 1
     packed = strategy.packs_deltas
+    freeze_div = probes and on_divergence == "freeze"
 
     def multi_fn(ctx: AxisCtx, state, staged, sched, root, start_event,
                  n_events: int, hyper=None):
@@ -198,12 +210,35 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
                     (params, server, acc, hist))
                 new_st = dict(st, params=params, server=server, hist=hist,
                               acc=acc)
+            if probes:
+                accept = ev["accept"].astype(jnp.float32)
+                upd = probelib.tree_norm(
+                    tree_sub(new_st["params"], st["params"]))
+                pr = {
+                    "update_norm": upd,
+                    "drift_norm": probelib.tree_norm(
+                        tree_sub(stale, st["params"])),
+                    "participation": accept,
+                    "masked_frac": 1.0 - accept,
+                    "sat_frac": (probelib.sat_frac(delta.q) if packed
+                                 else jnp.zeros((), jnp.float32)),
+                    "ef_residual_norm": jnp.zeros((), jnp.float32),
+                    "nonfinite": probelib.norm_nonfinite(upd),
+                }
+                if freeze_div:
+                    new_st = freeze_unless(1.0 - pr["nonfinite"], new_st, st)
             if alive is not None:
                 new_st = freeze_unless(alive, new_st, st)
             metrics = {"loss": loss,
                        "staleness": ev["staleness"].astype(jnp.float32),
                        "applied": ev["apply"].astype(jnp.float32),
                        "client": ev["client"].astype(jnp.float32)}
+            if probes:
+                if alive is not None:
+                    pr = probelib.mask_probes(alive, pr)
+                # stacked (P,) vector -> an (E, P) probe plane per launch
+                # (see build_multi_round)
+                metrics["probes"] = probelib.stack_probes(pr)
             return new_st, metrics
 
         return jax.lax.scan(body, state, xs)

@@ -55,10 +55,13 @@ _STRATEGY_KEYS = {"strategy", "train_params", "aggregator_params"}
 # not yet consumed) + model, the campaign sweep, and the flight recorder
 _TOP_KEYS = {"name", "model", "dataset", "consensus", "strategy", "runtime",
              "sweep", "clusters", "node_defaults", "node_configs",
-             "telemetry"}
+             "telemetry", "probes"}
 # flight-recorder knobs (repro/telemetry): presence of the section turns
 # the recorder on (enabled: false to keep a section but switch it off)
-_TELEMETRY_KEYS = {"enabled", "out_dir", "profile_chunks"}
+_TELEMETRY_KEYS = {"enabled", "out_dir", "profile_chunks", "cost_analysis"}
+# round-probe knobs (core/probes.py): presence of the section compiles the
+# probe outputs into the round/event scans (enabled: false to switch off)
+_PROBES_KEYS = {"enabled", "out_dir", "on_divergence"}
 
 
 def _check_keys(section_name: str, section, allowed) -> None:
@@ -151,6 +154,15 @@ def load_job(path_or_dict) -> Job:
     _check_keys("model", raw.get("model"), _MODEL_KEYS)
     _check_keys("runtime", rt, _FL_KEYS | _CSM_KEYS)
     _check_keys("telemetry", raw.get("telemetry"), _TELEMETRY_KEYS)
+    _check_keys("probes", raw.get("probes"), _PROBES_KEYS)
+    if raw.get("probes"):
+        # value validation (on_divergence enum, freeze-needs-enabled) lives
+        # in ProbeSpec; running it here fails at load time, naming the YAML
+        from repro.core.probes import ProbeSpec
+        p = raw["probes"]
+        ProbeSpec(enabled=bool(p.get("enabled", True)),
+                  out_dir=p.get("out_dir"),
+                  on_divergence=p.get("on_divergence", "report"))
 
     flkw = {}
     for section in (strat.get("train_params", {}),

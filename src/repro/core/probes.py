@@ -1,0 +1,290 @@
+"""Round-grained probe plane — pure diagnostics computed inside the scans.
+
+PR 7's flight recorder sees the chunk-boundary seams (compile/execute/
+stage/io wall-clock) but nothing about what happens *inside* a launch: a
+diverging FedProx lane, a saturating int8 quantizer or a starved async
+client is invisible until eval. The probe plane closes that gap with a
+fixed catalogue of **read-only** per-round diagnostics stacked as an extra
+``lax.scan`` output of the round/event programs (``core/rounds.py``,
+``core/async_rounds.py``) and drained at chunk boundaries into the flight
+recorder (Perfetto "C" counter tracks, one series per campaign lane) plus
+a tidy ``probes.csv`` keyed like ``campaign.csv``.
+
+The catalogue (every probe is one f32 scalar per round per lane):
+
+==================  ========================================================
+``update_norm``     L2 norm of the server parameter change this round
+                    (async: this event — 0 for buffered non-apply events).
+``drift_norm``      sync: weighted std of the client deltas around their
+                    aggregate, sqrt(E_w||d_c||^2 - ||E_w d_c||^2) — the
+                    client-drift magnitude FedProx/SCAFFOLD fight
+                    (decentralized: param spread across clients);
+                    async: ||stale snapshot - server params|| — staleness
+                    measured in parameter space, not versions.
+``participation``   sync: cohort clients with nonzero aggregation weight
+                    this round; async: 1 if the arrival was accepted.
+``masked_frac``     fraction of the total client weight mass excluded this
+                    round (cohort subsetting + straggler deadline drops;
+                    async: 1 - accept).
+``sat_frac``        int8 path: fraction of quantized values saturated at
+                    +-127 (a climbing value means the block scales are
+                    clipping); 0 on uncompressed paths.
+``ef_residual_norm``  int8 spatial path: RMS over cohort clients of the
+                    error-feedback residual norm; 0 where clients carry no
+                    residual state (temporal/async paths).
+``nonfinite``       divergence sentinel: 1.0 when any parameter is
+                    NaN/Inf after the round's update, else 0.0.
+==================  ========================================================
+
+Contracts (tests/test_probes.py): probes are strictly observational —
+probes-on trajectories are **bitwise** probes-off for every driver (they
+only add consumers of values the program already computes); probe values
+are deterministic across chunkings; dead/padded campaign lanes emit frozen
+(zero) probes. The divergence sentinel only *reports* by default; the
+opt-in ``on_divergence: freeze`` reuses the PR 4 alive-mask maskwork
+(``rounds.freeze_unless``) to freeze a NaN lane at its last finite state
+— a runtime select compiled in from launch 1, so a divergence never
+recompiles anything.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import pathlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the fixed probe catalogue: the P axis of the (S, R, P) stacked output.
+# Order is load-bearing (probes.csv columns and counter names follow it).
+PROBE_NAMES = ("update_norm", "drift_norm", "participation", "masked_frac",
+               "sat_frac", "ef_residual_norm", "nonfinite")
+
+# async per-event -> per-round reduction (chunking-invariant: rounds are
+# fixed event windows). Anything unlisted reduces by mean.
+ASYNC_REDUCE = {"update_norm": "max", "participation": "sum",
+                "nonfinite": "max"}
+
+_ON_DIVERGENCE = ("report", "freeze")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """Parsed ``probes:`` job section (validated by ``core/jobs.load_job``).
+
+    ``enabled`` compiles the probe outputs into the round/event programs;
+    off (the default) traces the exact pre-probe program. ``out_dir``
+    receives ``probes.csv`` (falls back to the telemetry out_dir, then the
+    executor's out_dir; rows stay in memory when none is set).
+    ``on_divergence`` is the sentinel's action: ``report`` (default) only
+    emits the probe; ``freeze`` holds a lane at its last finite state."""
+    enabled: bool = False
+    out_dir: Optional[str] = None
+    on_divergence: str = "report"
+
+    def __post_init__(self):
+        if self.on_divergence not in _ON_DIVERGENCE:
+            raise ValueError(
+                f"probes.on_divergence must be one of {_ON_DIVERGENCE}, "
+                f"got {self.on_divergence!r}")
+        if self.on_divergence == "freeze" and not self.enabled:
+            raise ValueError(
+                "probes.on_divergence: freeze needs probes.enabled: true "
+                "(the sentinel that drives the freeze is a probe)")
+
+    @property
+    def freeze(self) -> bool:
+        return self.enabled and self.on_divergence == "freeze"
+
+    @classmethod
+    def from_job(cls, job) -> "ProbeSpec":
+        """Build from a job's ``probes:`` section (absent -> disabled)."""
+        p = (getattr(job, "raw", None) or {}).get("probes") or {}
+        return cls(enabled=bool(p) and bool(p.get("enabled", True)),
+                   out_dir=p.get("out_dir"),
+                   on_divergence=p.get("on_divergence", "report"))
+
+
+# ---------------------------------------------------------------------------
+# In-program probe arithmetic (pure jnp; every helper is a read-only
+# consumer of values the round/event body already computed)
+# ---------------------------------------------------------------------------
+
+def tree_sq_norm(tree) -> jax.Array:
+    """Sum of squares over every leaf, accumulated in f32."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+               for leaf in leaves)
+
+
+def tree_norm(tree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_nonfinite(tree) -> jax.Array:
+    """1.0 when any leaf holds a NaN/Inf, else 0.0 (the sentinel)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    bad = sum(jnp.sum(~jnp.isfinite(leaf.astype(jnp.float32)))
+              for leaf in leaves)
+    return (bad > 0).astype(jnp.float32)
+
+
+def stack_probes(pr: dict) -> jax.Array:
+    """Probe dict -> one ``(P,)`` f32 vector in ``PROBE_NAMES`` order (the
+    P axis of the launch's (R, P) / (S, R, P) probe plane — one scan
+    output and one device->host transfer instead of seven)."""
+    return jnp.stack([pr[name].astype(jnp.float32)
+                      for name in PROBE_NAMES])
+
+
+def norm_nonfinite(norm) -> jax.Array:
+    """The sentinel read off the already-computed update norm: starting
+    from finite params, any NaN/Inf entering ``new_params`` makes the
+    (new - old) delta nonfinite, which poisons its sum-of-squares — so one
+    scalar finiteness check replaces a full parameter sweep per round."""
+    return (~jnp.isfinite(norm)).astype(jnp.float32)
+
+
+def per_client_sq_norms(deltas) -> jax.Array:
+    """(C,) sum-of-squares per client of a tree stacked on a leading C."""
+    leaves = jax.tree.leaves(deltas)
+    return sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)),
+                       axis=tuple(range(1, leaf.ndim)))
+               for leaf in leaves)
+
+
+def packed_sq_norms(q, scale) -> jax.Array:
+    """(C,) sum-of-squares of dequantized ``(C, N) int8`` sends, computed
+    blockwise from the scales — no (C, N) f32 materialization (XLA fuses
+    the cast into the reduce)."""
+    c, n = q.shape
+    nb = scale.shape[-1]
+    qsq = jnp.sum(jnp.square(q.astype(jnp.float32)).reshape(c, nb, n // nb),
+                  axis=-1)
+    return jnp.sum(qsq * jnp.square(scale), axis=-1)
+
+
+def packed_sq_norm(q, scale) -> jax.Array:
+    """Sum-of-squares of one dequantized ``(N,) int8`` send — the
+    per-client in-loop variant of ``packed_sq_norms``."""
+    nb = scale.shape[-1]
+    qsq = jnp.sum(jnp.square(q.astype(jnp.float32)).reshape(nb, -1),
+                  axis=-1)
+    return jnp.sum(qsq * jnp.square(scale))
+
+
+def sat_frac(q) -> jax.Array:
+    """Fraction of int8 values saturated at the +-127 clip points."""
+    return jnp.mean((jnp.abs(q.astype(jnp.int32)) >= 127)
+                    .astype(jnp.float32))
+
+
+def drift_from_moments(weights, per_client_sq, agg_sq, psum=lambda x: x):
+    """sqrt(E_w ||d_c||^2 - ||agg||^2), clipped at 0 — the weighted std of
+    the client deltas around their aggregate via the variance identity
+    (works for scanned clients too: only weighted *sums* are needed, never
+    the stacked deltas). ``psum`` folds cross-chip client shards."""
+    wsum = psum(weights.sum())
+    mean_sq = psum((weights * per_client_sq).sum()) \
+        / jnp.maximum(wsum, 1e-12)
+    return jnp.sqrt(jnp.maximum(mean_sq - agg_sq, 0.0))
+
+
+def mask_probes(alive, pr: dict) -> dict:
+    """Freeze a dead/padded lane's probes at 0 (``alive`` is the campaign
+    lane mask — scalar per lane under the vmap). A dropped lane's state
+    select discards its computed update, so its would-be probe values
+    describe arithmetic no trajectory keeps; zeroing them keeps the probe
+    stream as frozen as the state."""
+    keep = alive > 0
+    return {k: jnp.where(keep, v, jnp.zeros_like(v)) for k, v in pr.items()}
+
+
+# ---------------------------------------------------------------------------
+# Host-side async extras (pure functions of the precomputed schedule /
+# already-emitted metrics — zero device cost)
+# ---------------------------------------------------------------------------
+
+def buffer_occupancy(accept, apply) -> np.ndarray:
+    """(E,) accepted-not-yet-applied arrivals after each event, from the
+    schedule's host arrays (the scan body writes the arrival first, then
+    flushes — so an apply event's occupancy reads 0)."""
+    accept = np.asarray(accept).astype(np.int64)
+    apply = np.asarray(apply).astype(bool)
+    occ = np.empty(len(accept), np.int64)
+    run = 0
+    for i in range(len(accept)):
+        run += accept[i]
+        if apply[i]:
+            run = 0
+        occ[i] = run
+    return occ
+
+
+def staleness_hist(staleness, max_staleness: int) -> dict:
+    """Counter values ``{"s0": n0, ...}`` binning a window's staleness
+    stream (the last bucket absorbs >= max_staleness)."""
+    s = np.clip(np.asarray(staleness).astype(np.int64).ravel(), 0,
+                max_staleness)
+    counts = np.bincount(s, minlength=max_staleness + 1)
+    return {f"s{i}": int(c) for i, c in enumerate(counts)}
+
+
+# ---------------------------------------------------------------------------
+# probes.csv — tidy append-only table, keyed like campaign.csv
+# ---------------------------------------------------------------------------
+
+class ProbeTable:
+    """Append-only ``probes.csv`` writer (one row per (lane,) round).
+
+    The probe catalogue is fixed, so — unlike ``campaign.AppendTable`` —
+    columns never grow: the file truncates on the first flush of a process
+    (matching ``telemetry.jsonl``'s one-file-per-run convention) and every
+    later flush appends only the new rows."""
+
+    def __init__(self, path, lead):
+        self.path = pathlib.Path(path)
+        self.lead = list(lead)
+        self._fieldnames = None
+        self._fh = None
+        self._writer = None
+
+    def flush(self, rows) -> Optional[pathlib.Path]:
+        """Append ``rows`` (the new rows only — the caller buffers). The
+        file handle stays open across flushes (a boundary-per-round run
+        would otherwise pay an open/close per round); every flush ends on
+        a flushed handle, so the csv is readable mid-run."""
+        if not rows:
+            return self.path if self._fieldnames else None
+        if self._fieldnames is None:
+            self._fieldnames = self.lead + sorted(
+                {k for r in rows for k in r} - set(self.lead))
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = open(self.path, "w", newline="")
+            self._writer = csv.DictWriter(self._fh,
+                                          fieldnames=self._fieldnames)
+            self._writer.writeheader()
+        self._writer.writerows(rows)
+        self._fh.flush()
+        return self.path
+
+
+def read_probes(csv_path) -> list:
+    """Read a ``probes.csv`` back into tidy rows (floats where numeric,
+    ints for round/traj, categorical coordinates as strings)."""
+    def cell(k, v):
+        if k in ("round", "traj", "seed", "bucket", "lane"):
+            return int(float(v))
+        try:
+            return float(v)
+        except ValueError:
+            return v
+    with open(csv_path, newline="") as f:
+        return [{k: cell(k, v) for k, v in row.items() if v != ""}
+                for row in csv.DictReader(f)]

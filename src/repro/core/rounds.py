@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import SWEEPABLE_SCALARS, FLConfig, ModelConfig
 from repro.core import determinism, packing
+from repro.core import probes as probelib
 from repro.core.consensus import MultiWorkerAggregator
 from repro.core.strategy import (Strategy, client_sgd_step, tree_add,
                                  tree_scale, tree_sub, tree_zeros_like)
@@ -181,11 +182,17 @@ def packed_aggregate(topo, ctx: AxisCtx, pd, weights):
 # Spatial round
 # ---------------------------------------------------------------------------
 
-def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
+def build_spatial_round(model, strategy: Strategy, fl: FLConfig,
+                        probes: bool = False):
     """Returns round_fn(ctx, state, batch, weights, rng) -> (state, metrics).
 
     state: {"params", "server", "clients"}; for decentralized topology
-    ``params`` carries the per-client leading dim (diverged models)."""
+    ``params`` carries the per-client leading dim (diverged models).
+
+    ``probes`` (a trace-time flag: off compiles the exact pre-probe program)
+    adds a ``metrics["probes"]`` dict of read-only per-round diagnostics
+    (core/probes.py) — pure extra consumers of the round's intermediates,
+    so probes-on trajectories stay bitwise probes-off."""
     topo = get_topology(fl.topology, fl.gossip_steps)
     decentralized = isinstance(topo, Decentralized)
     mw = (MultiWorkerAggregator(fl.n_workers, fl.byzantine_workers,
@@ -208,11 +215,29 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
                 chip = chip * 0 + ctx.index(axis) * _grid_below(ctx, axis) + chip
         client_ids = chip * C_loc + jnp.arange(C_loc)
         keys = jax.vmap(lambda c: determinism.client_key(rng, c))(client_ids)
+        axes = tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a)
+        psum_ = (lambda x: jax.lax.psum(x, axes)) if axes else (lambda x: x)
+        pmean_ = (lambda x: jax.lax.pmean(x, axes)) if axes else (lambda x: x)
+        pr = {}
 
         def per_client(cbatch, cstate, key, start_params):
-            return local_train(model, inner, strategy_h, fl_h, start_params,
-                               server_state, cstate, cbatch, key,
-                               pack_deltas=packed)
+            delta, cst, loss = local_train(
+                model, inner, strategy_h, fl_h, start_params, server_state,
+                cstate, cbatch, key, pack_deltas=packed)
+            if not probes or decentralized:
+                return delta, cst, loss
+            # probe moments computed where the delta/residual are written
+            # (cache-hot, fusable with the producing ops) — a separate
+            # post-vmap pass would re-read every client's full parameter
+            # volume at memory speed, which dwarfs the training compute
+            # on small models
+            ex = {"sq": (probelib.packed_sq_norm(delta.q, delta.scale)
+                         if packed else probelib.tree_sq_norm(delta))}
+            if packed:
+                ex["sat"] = probelib.sat_frac(delta.q)
+            if isinstance(cst, dict) and "residual" in cst:
+                ex["rsq"] = probelib.tree_sq_norm(cst["residual"])
+            return delta, cst, loss, ex
 
         if decentralized:
             deltas, cstates, losses = jax.vmap(per_client)(
@@ -221,10 +246,22 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
             mixed = topo.mix(ctx, updated)
             new_params = mixed
             new_server = server_state
+            if probes:
+                # drift for gossip = param spread across the client models:
+                # sqrt(mean_c ||p_c - mean_c' p_c'||^2)
+                mean_p = jax.tree.map(lambda t: pmean_(t.mean(0)), new_params)
+                spread = probelib.per_client_sq_norms(jax.tree.map(
+                    lambda t, m: t - m[None], new_params, mean_p))
+                pr["drift_norm"] = jnp.sqrt(pmean_(spread.mean()))
+                pr["sat_frac"] = jnp.zeros((), jnp.float32)
+                pr["ef_residual_norm"] = jnp.zeros((), jnp.float32)
         else:
-            deltas, cstates, losses = jax.vmap(
-                per_client, in_axes=(0, 0, 0, None))(
+            out = jax.vmap(per_client, in_axes=(0, 0, 0, None))(
                 batch, state["clients"], keys, params)
+            if probes:
+                deltas, cstates, losses, pex = out
+            else:
+                deltas, cstates, losses = out
             if packed:
                 agg_flat = packed_aggregate(topo, ctx, deltas, weights)
                 agg = packing.unpack_tree(agg_flat, params)
@@ -243,13 +280,29 @@ def build_spatial_round(model, strategy: Strategy, fl: FLConfig):
                 new_server = dict(new_server,
                                   c=topo.aggregate(ctx, cstates["c_i"],
                                                    weights))
+            if probes:
+                pr["sat_frac"] = (pmean_(pex["sat"].mean()) if packed
+                                  else jnp.zeros((), jnp.float32))
+                pr["drift_norm"] = probelib.drift_from_moments(
+                    weights, pex["sq"], probelib.tree_sq_norm(agg), psum_)
+                if "rsq" in pex:
+                    pr["ef_residual_norm"] = jnp.sqrt(
+                        psum_(pex["rsq"].sum()) / jnp.maximum(
+                            psum_(jnp.asarray(C_loc, jnp.float32)), 1.0))
+                else:
+                    pr["ef_residual_norm"] = jnp.zeros((), jnp.float32)
         loss = losses.mean()
-        axes = tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a)
         if axes:
             loss = jax.lax.pmean(loss, axes)
         new_state = {"params": new_params, "server": new_server,
                      "clients": cstates}
-        return new_state, {"loss": loss}
+        metrics = {"loss": loss}
+        if probes:
+            pr["update_norm"] = probelib.tree_norm(
+                tree_sub(new_params, params))
+            pr["nonfinite"] = probelib.norm_nonfinite(pr["update_norm"])
+            metrics["probes"] = pr
+        return new_state, metrics
 
     return round_fn
 
@@ -268,11 +321,14 @@ def _grid_below(ctx: AxisCtx, axis: str) -> int:
 # ---------------------------------------------------------------------------
 
 def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
-                         cfg: ModelConfig):
+                         cfg: ModelConfig, probes: bool = False):
     """Returns round_fn(ctx, state, batch, weights, rng) -> (state, metrics).
 
     batch: (C_t, steps, B_loc, ...) — cohort clients scanned in time, each
-    using the whole mesh. For C_t == 1 the delta buffer is elided."""
+    using the whole mesh. For C_t == 1 the delta buffer is elided.
+    ``probes`` as in ``build_spatial_round`` (for the scanned-client path
+    the drift moments accumulate in the fori carry — only weighted sums are
+    needed, never the stacked deltas)."""
     from repro.sharding import specs as sspecs
     topo = get_topology(fl.topology, fl.gossip_steps)
     mw = (MultiWorkerAggregator(fl.n_workers, fl.byzantine_workers,
@@ -289,7 +345,7 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
         C_t = jax.tree.leaves(batch)[0].shape[0]
 
         def client(i, carry):
-            acc, loss_acc = carry
+            acc, loss_acc, *rest = carry
             cbatch = jax.tree.map(lambda t: t[i], batch)
             key = determinism.client_key(rng, i)
             delta, _, loss = local_train(
@@ -298,7 +354,12 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
             w = weights[i]
             acc = tree_add(acc, tree_scale(
                 delta, w / jnp.maximum(weights.sum(), 1e-12)))
-            return acc, loss_acc + loss / C_t
+            out = (acc, loss_acc + loss / C_t)
+            if probes:
+                # weighted second moment of the deltas for the drift probe
+                out += (rest[0] + w / jnp.maximum(weights.sum(), 1e-12)
+                        * probelib.tree_sq_norm(delta),)
+            return out
 
         def client_packed(i):
             cbatch = jax.tree.map(lambda t: t[i], batch)
@@ -308,6 +369,9 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
                 cbatch, key, gather_fn, grad_sync, pack_deltas=True)
             return pd, loss
 
+        pr = {"sat_frac": jnp.zeros((), jnp.float32),
+              "ef_residual_norm": jnp.zeros((), jnp.float32),
+              "drift_norm": jnp.zeros((), jnp.float32)} if probes else {}
         if packed:
             # clients still run one at a time (lax.map scans), but their
             # int8 sends are stacked to the kernel's (C_t, N) layout and
@@ -325,6 +389,11 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
             agg = jax.tree.map(
                 lambda a, p: a.astype(p.dtype),
                 packing.unpack_tree(agg_flat, params), params)
+            if probes:
+                pr["sat_frac"] = probelib.sat_frac(pds.q)
+                pr["drift_norm"] = probelib.drift_from_moments(
+                    w, probelib.packed_sq_norms(pds.q, pds.scale),
+                    jnp.sum(jnp.square(agg_flat)))
         elif C_t == 1:
             cbatch = jax.tree.map(lambda t: t[0], batch)
             key = determinism.client_key(rng, 0)
@@ -333,8 +402,17 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
                 cbatch, key, gather_fn, grad_sync)
         else:
             acc0 = tree_zeros_like(params)
-            agg, loss = jax.lax.fori_loop(
-                0, C_t, lambda i, c: client(i, c), (acc0, 0.0))
+            if probes:
+                agg, loss, msq = jax.lax.fori_loop(
+                    0, C_t, lambda i, c: client(i, c),
+                    (acc0, 0.0, jnp.zeros((), jnp.float32)))
+                # msq is already the weighted mean (weights normalized in
+                # the carry), so the variance identity needs no psum here
+                pr["drift_norm"] = jnp.sqrt(jnp.maximum(
+                    msq - probelib.tree_sq_norm(agg), 0.0))
+            else:
+                agg, loss = jax.lax.fori_loop(
+                    0, C_t, lambda i, c: client(i, c), (acc0, 0.0))
 
         # hierarchical/cross-pod tier: average edge aggregates over pods
         if ctx.pod is not None:
@@ -348,7 +426,18 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
         axes = tuple(a for a in (ctx.pod, ctx.data, ctx.model) if a)
         if axes:
             loss = jax.lax.pmean(loss, axes)
-        return new_state, {"loss": loss}
+        metrics = {"loss": loss}
+        if probes:
+            pr["update_norm"] = probelib.tree_norm(
+                tree_sub(new_params, params))
+            pr["nonfinite"] = probelib.norm_nonfinite(pr["update_norm"])
+            if axes:
+                # the temporal model is sharded; probe scalars are computed
+                # identically per device (grad_sync replicates), so pmean is
+                # the replication-safe fold
+                pr = {k: jax.lax.pmean(v, axes) for k, v in pr.items()}
+            metrics["probes"] = pr
+        return new_state, metrics
 
     return round_fn
 
@@ -359,7 +448,8 @@ def build_temporal_round(model, strategy: Strategy, fl: FLConfig,
 
 def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
                       placement: str = "spatial", fault=None,
-                      batch_size: Optional[int] = None):
+                      batch_size: Optional[int] = None,
+                      probes: bool = False, on_divergence: str = "report"):
     """Fuse ``rounds_per_launch`` FL rounds into one compiled program.
 
     Wraps a single-round program (spatial or temporal) in a ``jax.lax.scan``
@@ -390,12 +480,13 @@ def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
         if cfg is None:
             raise ValueError("temporal placement needs the ModelConfig "
                              "(sharding specs are derived from it)")
-        single = build_temporal_round(model, strategy, fl, cfg)
+        single = build_temporal_round(model, strategy, fl, cfg, probes=probes)
     elif placement == "spatial":
-        single = build_spatial_round(model, strategy, fl)
+        single = build_spatial_round(model, strategy, fl, probes=probes)
     else:
         raise ValueError(f"unknown placement {placement!r} "
                          "(want 'spatial' or 'temporal')")
+    freeze_div = probes and on_divergence == "freeze"
     fault = fault if fault is not None else FaultModel(seed=fl.seed)
     batch_size = batch_size or fl.batch_size
     steps = max(fl.local_steps, 1)
@@ -414,10 +505,29 @@ def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
             batch = gather_client_batches(staged, rkey, batch_size, steps)
             mask = cohort_mask(fault_h, r, fl.n_clients, target,
                                fl.straggler_overprovision)
-            new_st, metrics = single(ctx, st, batch, base_w * mask, rkey,
-                                     hyper)
+            eff_w = base_w * mask
+            new_st, metrics = single(ctx, st, batch, eff_w, rkey, hyper)
+            if probes:
+                # engine probes live here, where the cohort/straggler mask
+                # and the staged weight mass both exist
+                pr = metrics.pop("probes")
+                pr["participation"] = (eff_w > 0).sum().astype(jnp.float32)
+                pr["masked_frac"] = 1.0 - eff_w.sum() / jnp.maximum(
+                    base_w.sum(), 1e-12)
+                if freeze_div:
+                    # hold a diverged lane at its last finite state — the
+                    # same runtime select the lane scheduler uses, compiled
+                    # in from launch 1 (a divergence never recompiles)
+                    new_st = freeze_unless(1.0 - pr["nonfinite"], new_st, st)
             if alive is not None:
                 new_st = freeze_unless(alive, new_st, st)
+            if probes:
+                if alive is not None:
+                    pr = probelib.mask_probes(alive, pr)
+                # one stacked (P,) vector, not 7 scalars: the scan emits a
+                # single (R, P) probe plane per launch (one output buffer,
+                # one host transfer), (S, R, P) under the campaign vmap
+                metrics = dict(metrics, probes=probelib.stack_probes(pr))
             return new_st, metrics
 
         rounds = start_round + jnp.arange(n_rounds)

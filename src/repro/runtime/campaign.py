@@ -73,6 +73,7 @@ from repro.core import sweeps
 from repro.core.blockchain import param_digest
 from repro.core.jobs import make_dataset, make_fault
 from repro.core.plan import program_signature
+from repro.core.probes import PROBE_NAMES
 from repro.core.rounds import init_state
 from repro.data.pipeline import DEDUP_STAGED_AXES, stage_partitions_dedup
 from repro.launch.mesh import lane_mesh, shard_lanes
@@ -407,6 +408,9 @@ class CampaignExecutor(Executor):
         self.schedules = [uniq[u] for u in lane_u]   # per-lane host views
         self.schedule = self.schedules[0]       # horizon checks read len()
         self.lane_sched = np.asarray(lane_u, np.int32)
+        from repro.core.probes import buffer_occupancy
+        occ_uniq = [buffer_occupancy(sc.accept, sc.apply) for sc in uniq]
+        self._occupancy_lane = np.stack([occ_uniq[u] for u in lane_u])
         devs = [sc.device_arrays() for sc in uniq]
         sched = {k: jnp.stack([d[k] for d in devs]) for k in devs[0]}
         self.sched_dev = shard_lanes(sched, self.mesh,
@@ -477,10 +481,15 @@ class CampaignExecutor(Executor):
         if not self.alive_lanes():
             return self._skip_dead_bucket(n)
         t0 = time.time()
-        state, metrics = self._round_program(n)(
-            self.state, self.staged, self.roots, self._launch_hyper(), start)
+        prog = self._round_program(n)
+        args = (self.state, self.staged, self.roots, self._launch_hyper(),
+                start)
+        if self.recorder.enabled and self._cost_enabled:
+            self._last_program = (n, prog, args)
+        state, metrics = prog(*args)
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
+        self._capture_probes(start, n, metrics.pop("probes", None))
         stacked = {k: np.asarray(v) for k, v in metrics.items()}  # (S, n)
         return self._table_rows(stacked, start, n, dt)
 
@@ -490,17 +499,36 @@ class CampaignExecutor(Executor):
         epr = self.events_per_round
         n_ev = n * epr
         t0 = time.time()
-        state, metrics = self._event_program(n_ev)(
-            self.state, self.staged, self.sched_dev, self._lane_sched_dev,
-            self.roots, self._launch_hyper(), start * epr)
+        prog = self._event_program(n_ev)
+        args = (self.state, self.staged, self.sched_dev,
+                self._lane_sched_dev, self.roots, self._launch_hyper(),
+                start * epr)
+        if self.recorder.enabled and self._cost_enabled:
+            self._last_program = (("async", n_ev), prog, args)
+        state, metrics = prog(*args)
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
+        probes = self._reduce_async_probes(metrics.pop("probes", None), n)
         ev = {k: np.asarray(v).reshape(self.S_pad, n, epr)
               for k, v in metrics.items()}
+        if probes is not None:
+            from repro.core.probes import staleness_hist
+            self._capture_probes(
+                start, n, probes,
+                extra=self._async_probe_extras(start, n),
+                hists={f"probe:staleness_hist:lane{s}": staleness_hist(
+                    ev["staleness"][s], self.job.fl.max_staleness)
+                    for s in self.alive_lanes()})
         stacked = {"loss": ev["loss"].mean(-1),
                    "staleness": ev["staleness"].mean(-1),
                    "applied": ev["applied"].sum(-1)}
         return self._table_rows(stacked, start, n, dt)
+
+    def _async_probe_extras(self, start: int, n: int):
+        """Per-lane buffer occupancy off each lane's own schedule."""
+        epr = self.events_per_round
+        occ = self._occupancy_lane[:, start * epr:(start + n) * epr]
+        return {"buffer_occ": occ.reshape(self.S_pad, n, epr).mean(-1)}
 
     def _table_rows(self, stacked, start: int, n: int, dt: float):
         """Append per-(trajectory, round) rows to the tidy results table
@@ -546,6 +574,52 @@ class CampaignExecutor(Executor):
             for k, v in ev.items():
                 agg.setdefault(k, []).append(v)
         rows[-1].update({k: float(np.mean(v)) for k, v in agg.items()})
+
+    # -- probe plane: per-lane capture -------------------------------------
+    def _capture_probes(self, start, n, probes, extra=None, hists=None):
+        """Per-lane probe capture: matrices come back ``(S_pad, n)`` off the
+        vmapped scan; rows land keyed like campaign.csv (coords + traj +
+        round), alive lanes only — dead/padded lanes emit frozen (zero)
+        probes inside the program and never reach the table."""
+        if probes is None:
+            return
+        # one (S_pad, n, P) plane off the device, one tolist() per probe +
+        # cached lane labels: the per-row work below is pure-python dict
+        # building (see the base method's chunk=1 rationale)
+        a = np.asarray(probes)
+        cols = {name: a[..., j].tolist()
+                for j, name in enumerate(PROBE_NAMES)}
+        if extra:
+            cols.update({k: np.asarray(v).tolist()
+                         for k, v in extra.items()})
+        items = sorted(cols.items())
+        alive = self.alive_lanes()
+        self._probe_lanes = [(s, f"lane{s}") for s in alive]
+        for s in alive:
+            coords = dict(self.coords[s], traj=s)
+            for i in range(n):
+                row = dict(coords, round=start + i)
+                row.update((k, col[s][i]) for k, col in items)
+                self.probe_rows.append(row)
+        self._pending_probes = (start, n, cols, hists or {})
+
+    def _probe_series(self, m, i: int) -> dict:
+        """One counter series per alive lane -> per-lane Perfetto tracks."""
+        return {label: m[s][i] for s, label in self._probe_lanes}
+
+    def _probe_lead_columns(self):
+        return [*self.spec.names, "traj", "round"]
+
+    def _digest_record(self, event_mark: int, last: int):
+        """Async digest cadence, per alive trajectory lane (same reasoning
+        as ``_ledger_record``: digests must certify per-run params)."""
+        for s in self.alive_lanes():
+            params_s = jax.tree.map(lambda t: t[s], self.state["params"])
+            self._digest_blocks += 1
+            self.job.ledger.append(
+                last, "async_digest",
+                {"event": int(event_mark), "traj": s,
+                 "digest": param_digest(params_s)})
 
     # -- flight-recorder hooks ---------------------------------------------
     def _telemetry_attrs(self) -> dict:

@@ -29,6 +29,7 @@ NodeStage:    0=not-ready 1=ready-for-job 2=ready-with-dataset
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import time
 from typing import Any, Callable, Optional
 
@@ -42,6 +43,8 @@ from repro.core import determinism
 from repro.core.blockchain import param_digest
 from repro.core.kvstore import KVStore
 from repro.core.plan import resolve_placement
+from repro.core.probes import (ASYNC_REDUCE, PROBE_NAMES, ProbeSpec,
+                               ProbeTable, buffer_occupancy, staleness_hist)
 from repro.core.rounds import build_multi_round, init_state
 from repro.data.pipeline import stage_partitions
 from repro.kernels import ops as kernel_ops
@@ -71,6 +74,21 @@ class Executor:
             self.recorder = FlightRecorder.from_job(
                 self.job, fallback_dir=getattr(self, "out_dir", None))
         self._launches = 0                # launch ordinal (profile_chunks)
+        # Round probe plane (core/probes.py): a ``probes:`` job section
+        # compiles read-only per-round diagnostics into the scans; drained
+        # at chunk boundaries into counter tracks + probes.csv.
+        self.probes_spec = ProbeSpec.from_job(self.job)
+        self.probe_rows = []              # tidy per-round probe rows
+        self._probe_flushed = 0
+        self._probe_table = None
+        self._pending_probes = None       # launch stash for the drain
+        self._digest_blocks = 0           # async ledger-digest cadence
+        # per-program FLOPs/bytes off the lowered computation (telemetry
+        # report's program table); ``cost_analysis: false`` opts out
+        t = (getattr(self.job, "raw", None) or {}).get("telemetry") or {}
+        self._cost_enabled = bool(t.get("cost_analysis", True))
+        self._cost_seen = set()
+        self._last_program = None
         fl = self.job.fl
         # single source of truth with core/plan.py's program signatures:
         # a drift here would bucket lanes whose compiled programs differ
@@ -82,13 +100,17 @@ class Executor:
             # buffer flush, or (FedAsync) one arrival per client on average.
             self.events_per_round = (fl.async_buffer if fl.async_buffer > 1
                                      else fl.n_clients)
-            self._multi = build_async_multi(self.job.model,
-                                            self.job.strategy, fl)
+            self._multi = build_async_multi(
+                self.job.model, self.job.strategy, fl,
+                probes=self.probes_spec.enabled,
+                on_divergence=self.probes_spec.on_divergence)
         elif self.mode == "sync":
             self._multi = build_multi_round(
                 self.job.model, self.job.strategy, fl,
                 cfg=getattr(self.job.model, "cfg", None),
-                placement=self.placement, fault=self.job.fault)
+                placement=self.placement, fault=self.job.fault,
+                probes=self.probes_spec.enabled,
+                on_divergence=self.probes_spec.on_divergence)
         else:
             raise ValueError(f"unknown mode {self.mode!r} "
                              "(want 'sync' or 'async')")
@@ -157,6 +179,10 @@ class Executor:
             max_staleness=fl.max_staleness,
             concurrency=fl.async_concurrency)
         self.sched_dev = self.schedule.device_arrays()
+        # buffer-occupancy probe stream: a pure function of the schedule's
+        # accept/apply bits, so it is precomputed host-side once
+        self._occupancy = buffer_occupancy(self.schedule.accept,
+                                           self.schedule.apply)
         if "hist" not in self.state:
             self.state = async_init_state(self.state, self.schedule.ring,
                                           fl, self.job.strategy)
@@ -312,7 +338,104 @@ class Executor:
                 **self._telemetry_attrs())
         rec.counter("host", track=self.telemetry_track, **host_usage())
         self._record_lane_telemetry()
+        self._record_program_cost(sp)
+        self._drain_probe_counters(sp._t0, rec._now_us())
         return rows
+
+    def _record_program_cost(self, sp):
+        """FLOPs/bytes per compiled program off ``Lowered.cost_analysis()``
+        (lowering only retraces — no second backend compile), recorded once
+        per program key on its compile launch; the telemetry report's
+        program table picks the counter up."""
+        stash, self._last_program = self._last_program, None
+        if stash is None or not sp.attrs.get("compile_delta"):
+            return
+        key, prog, args = stash
+        if key in self._cost_seen:
+            return
+        self._cost_seen.add(key)
+        try:
+            cost = prog.lower(*args).cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
+            values = {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+        except Exception:
+            return                 # cost analysis is backend-best-effort
+        self.recorder.counter("program_cost", track=self.telemetry_track,
+                              program=str(key), **values)
+
+    # -- probe drain (core/probes.py) -------------------------------------
+    def _capture_probes(self, start: int, n: int, probes, extra=None,
+                        hists=None):
+        """Stash a launch's per-round probe matrices: tidy rows buffer now
+        (flushed to probes.csv at the chunk boundary), counter samples at
+        ``_drain_probe_counters`` (back-dated across the launch span —
+        probes are device values the host first sees at the boundary)."""
+        if probes is None:
+            return
+        # one (n, P) matrix off the device, one tolist(): everything
+        # downstream (rows, counter series, json/csv encoding) works on
+        # native python floats — per-element numpy scalar extraction and
+        # per-probe transfers dominate at chunk=1
+        a = np.asarray(probes)
+        cols = {name: a[..., j].tolist()
+                for j, name in enumerate(PROBE_NAMES)}
+        if extra:
+            cols.update({k: np.asarray(v).tolist()
+                         for k, v in extra.items()})
+        items = sorted(cols.items())
+        for i in range(n):
+            row = {"round": start + i}
+            row.update((k, col[i]) for k, col in items)
+            self.probe_rows.append(row)
+        self._pending_probes = (start, n, cols, hists or {})
+
+    def _drain_probe_counters(self, t0_us: int, t1_us: int):
+        """Perfetto "C" tracks: one ``probe:<name>`` counter per probe (the
+        campaign override emits one series per alive lane), per-round
+        samples interpolated across the launch span they were computed
+        inside; histogram counters land at the span end."""
+        pend, self._pending_probes = self._pending_probes, None
+        if pend is None or not self.recorder.enabled:
+            return
+        start, n, mats, hists = pend
+        rec, track = self.recorder, self.telemetry_track
+        for i in range(n):
+            t = int(t0_us + (t1_us - t0_us) * (i + 1) / n)
+            for name, m in mats.items():
+                rec.counter(f"probe:{name}", track=track, t_us=t,
+                            **self._probe_series(m, i))
+        for name, values in hists.items():
+            rec.counter(name, track=track, t_us=t1_us, **values)
+
+    def _probe_series(self, m, i: int) -> dict:
+        """Counter series for round ``i`` (campaigns: one per alive lane)."""
+        return {"value": m[i]}
+
+    def _reduce_async_probes(self, probes, n: int):
+        """(..., n_events, P) per-event probe plane -> (..., n, P)
+        per-round values. The reductions are fixed per probe
+        (core/probes.ASYNC_REDUCE) and rounds are fixed event windows, so
+        any chunking yields the same per-round stream."""
+        if probes is None:
+            return None
+        epr = self.events_per_round
+        a = np.asarray(probes)
+        a = a.reshape(a.shape[:-2] + (n, epr, a.shape[-1]))
+        out = np.empty(a.shape[:-3] + (n, a.shape[-1]), np.float32)
+        for j, name in enumerate(PROBE_NAMES):
+            red = ASYNC_REDUCE.get(name, "mean")
+            out[..., j] = getattr(a[..., j], red)(axis=-1)
+        return out
+
+    def _async_probe_extras(self, start: int, n: int):
+        """Host-side async probe columns: per-round mean buffer occupancy
+        (precomputed from the schedule's accept/apply stream)."""
+        epr = self.events_per_round
+        occ = self._occupancy[start * epr:(start + n) * epr]
+        return {"buffer_occ": occ.reshape(n, epr).mean(-1)}
 
     def _telemetry_attrs(self) -> dict:
         """Driver-specific launch-span attrs (campaigns: lane occupancy)."""
@@ -323,10 +446,14 @@ class Executor:
 
     def _launch_sync(self, start: int, n: int):
         t0 = time.time()
-        state, metrics = self._round_program(n)(
-            self.state, self.staged, self.root, self.hyper, start)
+        prog = self._round_program(n)
+        args = (self.state, self.staged, self.root, self.hyper, start)
+        if self.recorder.enabled and self._cost_enabled:
+            self._last_program = (n, prog, args)
+        state, metrics = prog(*args)
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
+        self._capture_probes(start, n, metrics.pop("probes", None))
         stacked = {k: np.asarray(v) for k, v in metrics.items()}
         return [dict({k: float(v[i]) for k, v in stacked.items()},
                      round_s=dt / n) for i in range(n)]
@@ -338,13 +465,22 @@ class Executor:
         epr = self.events_per_round
         n_ev = n * epr
         t0 = time.time()
-        state, metrics = self._event_program(n_ev)(
-            self.state, self.staged, self.sched_dev, self.root, self.hyper,
-            start * epr)
+        prog = self._event_program(n_ev)
+        args = (self.state, self.staged, self.sched_dev, self.root,
+                self.hyper, start * epr)
+        if self.recorder.enabled and self._cost_enabled:
+            self._last_program = (("async", n_ev), prog, args)
+        state, metrics = prog(*args)
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
+        probes = self._reduce_async_probes(metrics.pop("probes", None), n)
         stacked = {k: np.asarray(v).reshape(n, epr)
                    for k, v in metrics.items()}
+        if probes is not None:
+            self._capture_probes(
+                start, n, probes, extra=self._async_probe_extras(start, n),
+                hists={"probe:staleness_hist": staleness_hist(
+                    stacked["staleness"], self.job.fl.max_staleness)})
         return [{"loss": float(stacked["loss"][i].mean()),
                  "staleness": float(stacked["staleness"][i].mean()),
                  "applied": float(stacked["applied"][i].sum()),
@@ -389,6 +525,13 @@ class Executor:
             self._merge_eval(rows)
         for i in range(n):
             self.logger.log_round(start + i, **rows[i])
+        if self.probes_spec.enabled and \
+                len(self.probe_rows) > self._probe_flushed:
+            with rec.span("probe_flush", track=track):
+                self._flush_probes()
+        if self.mode == "async" and fl.digest_every_events > 0 and \
+                self.job.ledger is not None:
+            self._digest_cadence(start, n, last)
         self.round_idx += n
         # save when this chunk crossed a checkpoint_every multiple (the
         # cadence survives chunk sizes that don't divide it)
@@ -404,6 +547,67 @@ class Executor:
         """Checkpoint manifest extras (campaigns add the lane count so a
         resume against a different sweep grid fails loudly)."""
         return {"next_round": self.round_idx}
+
+    # -- probes.csv --------------------------------------------------------
+    def _probe_lead_columns(self):
+        return ["round"]
+
+    def _probe_path(self) -> Optional[pathlib.Path]:
+        """Where probes.csv lands: the ``probes.out_dir`` knob, else the
+        telemetry out_dir, else the executor's own out_dir/ckpt_dir (rows
+        stay memory-only when none is set). Non-default tracks (planner
+        buckets) suffix the filename so a shared dir cannot collide."""
+        spec = self.probes_spec
+        out = spec.out_dir or \
+            (self.recorder.out_dir if self.recorder.enabled else None) or \
+            getattr(self, "out_dir", None) or self.ckpt_dir
+        if out is None:
+            return None
+        name = ("probes.csv" if self.telemetry_track == "run"
+                else f"probes_{self.telemetry_track}.csv")
+        return pathlib.Path(out) / name
+
+    def _flush_probes(self):
+        """Append the rows buffered since the last boundary to probes.csv
+        (tidy, keyed like campaign.csv); ``self.probe_rows`` keeps the full
+        in-memory view either way."""
+        new = self.probe_rows[self._probe_flushed:]
+        self._probe_flushed = len(self.probe_rows)
+        if not new:
+            return
+        if self._probe_table is None:
+            path = self._probe_path()
+            if path is None:
+                return
+            self._probe_table = ProbeTable(path, self._probe_lead_columns())
+        self._probe_table.flush(new)
+
+    # -- async ledger-digest cadence (ROADMAP carried item) ----------------
+    def _digest_cadence(self, start: int, n: int, last: int):
+        """Emit one ledger digest block per ``digest_every_events`` mark the
+        finished chunk crossed (evaluated at chunk boundaries — the block
+        digests the boundary state, so the block *count* is chunking-
+        invariant). Recorded as a "digest" span + cumulative counter so
+        digest cost shows in the telemetry report."""
+        rec, track = self.recorder, self.telemetry_track
+        epr = self.events_per_round
+        d = self.job.fl.digest_every_events
+        e0, e1 = start * epr, (start + n) * epr
+        marks = range((e0 // d + 1) * d, e1 + 1, d)
+        if not len(marks):
+            return
+        with rec.span("digest", track=track, events=e1, blocks=len(marks)):
+            for m in marks:
+                self._digest_record(m, last)
+        rec.counter("digest", track=track, blocks=self._digest_blocks)
+
+    def _digest_record(self, event_mark: int, last: int):
+        """One digest block (campaigns override: one per alive lane)."""
+        self._digest_blocks += 1
+        self.job.ledger.append(
+            last, "async_digest",
+            {"event": int(event_mark),
+             "digest": param_digest(self.state["params"])})
 
     def _ledger_record(self, last: int):
         """Ledger hook at the chunk boundary (campaigns override: one block

@@ -199,6 +199,9 @@ class PlanExecutor:
         if self.out_dir:
             with rec.span("parquet", track="plan"):
                 self._write_parquet()
+            if any(ex.probe_rows for ex in self.execs):
+                with rec.span("probe_flush", track="plan"):
+                    self.write_probes()
         rec.flush()
         return self
 
@@ -324,6 +327,33 @@ class PlanExecutor:
         path = table.flush(self.rows(), self._lead_columns())
         self._write_parquet(out)
         return path
+
+    def probe_rows(self) -> list:
+        """The merged probe table: every bucket's probe rows keyed like the
+        merged results — (bucket, global lane, sweep coords, traj, round)
+        — in (round, lane) order. The per-bucket ``probes_bucket<i>.csv``
+        files stay the incrementally-flushed artifacts."""
+        out = []
+        for bucket, ex in zip(self.plan.buckets, self.execs):
+            for row in ex.probe_rows:
+                out.append({"bucket": bucket.index,
+                            "lane": bucket.lane_ids[row["traj"]], **row})
+        out.sort(key=lambda r: (r["round"], r["lane"]))
+        return out
+
+    def write_probes(self, out_dir=None):
+        """Write the merged ``probes.csv`` (the lockstep loop calls this at
+        the end of a probed run; also an explicit export entry point)."""
+        from repro.core.probes import ProbeTable
+        rows = self.probe_rows()
+        if not rows:
+            return None
+        out = pathlib.Path(out_dir or self.out_dir or ".")
+        out.mkdir(parents=True, exist_ok=True)
+        table = ProbeTable(out / "probes.csv",
+                           ["bucket", "lane", *self.plan.spec.names,
+                            "traj", "round"])
+        return table.flush(rows)
 
     def _write_parquet(self, out_dir=None):
         write_parquet(self.rows(), self._lead_columns(),

@@ -141,11 +141,16 @@ class FlightRecorder:
         stack.append(sp)
         return sp
 
-    def counter(self, name: str, track: str = "run", **values):
+    def counter(self, name: str, track: str = "run", *, t_us=None, **values):
+        """Point sample; ``t_us`` backdates it onto the recorder clock (the
+        probe drain stamps per-round samples interpolated across the launch
+        span they were computed inside — they are device values, and the
+        host only sees them at the chunk boundary)."""
         if not self.enabled:
             return
         self._emit({"kind": "counter", "name": name, "track": track,
-                    "t_us": self._now_us(), "values": values})
+                    "t_us": self._now_us() if t_us is None else int(t_us),
+                    "values": values})
 
     def profile(self, ordinal: int):
         """``jax.profiler`` capture context for launch ``ordinal`` when the
@@ -218,4 +223,27 @@ def read_events(path) -> list:
         raise FileNotFoundError(
             f"no telemetry.jsonl at {p} — was the run's job missing a "
             "telemetry: {enabled: true, out_dir: ...} section?")
-    return [json.loads(line) for line in p.read_text().splitlines() if line]
+    lines = p.read_text().splitlines()
+    if not any(line.strip() for line in lines):
+        raise ValueError(
+            f"empty telemetry.jsonl at {p} — the run wrote no events "
+            "(crashed before the first flush, or telemetry disabled?)")
+    events = []
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                # a crash mid-write leaves one torn trailing line; everything
+                # before it is intact (events are appended whole-line)
+                break
+            raise ValueError(
+                f"corrupt telemetry.jsonl at {p}: line {i + 1} is not "
+                "valid JSON (truncated mid-run?)") from None
+    if not events:
+        raise ValueError(
+            f"empty telemetry.jsonl at {p} — only a torn partial line "
+            "(crashed during the first flush?)")
+    return events

@@ -35,7 +35,7 @@ _CATEGORY = {
     "init_state": "init",
     "restore": "io", "checkpoint_save": "io", "ledger": "io", "eval": "io",
     "table_flush": "io", "parquet": "io", "scheduler": "io",
-    "finish_chunk": "io",
+    "finish_chunk": "io", "probe_flush": "io", "digest": "io",
     "scaffold": "host", "chunk": "host",
 }
 _CATEGORY_ORDER = ("compile", "execute", "stage", "io", "init", "host",
@@ -135,11 +135,21 @@ def report(run_dir_or_events) -> str:
         if ev["track"] not in tracks:
             tracks.append(ev["track"])
     occupancy: dict = {}
+    cost: dict = {}
     for e in events:
-        if e.get("kind") == "counter" and e["name"] == "lane_occupancy":
+        if e.get("kind") != "counter":
+            continue
+        if e["name"] == "lane_occupancy":
             occupancy[e["track"]] = e["values"]
+        elif e["name"] == "program_cost":
+            # per-program FLOPs/bytes (Lowered.cost_analysis, recorded once
+            # per compiled program on its compile launch) — summed per track
+            c = cost.setdefault(e["track"], {"flops": 0.0, "bytes": 0.0})
+            c["flops"] += float(e["values"].get("flops", 0.0))
+            c["bytes"] += float(e["values"].get("bytes_accessed", 0.0))
     lines.append(f"  {'track':>10} {'launches':>9} {'compiles':>9} "
-                 f"{'execute_s':>10} {'compile_s':>10} {'lanes':>8}")
+                 f"{'execute_s':>10} {'compile_s':>10} {'lanes':>8} "
+                 f"{'gflops':>8} {'GB':>7}")
     for t in tracks:
         launches = [e for e in spans
                     if e["track"] == t and e["name"] == "launch"]
@@ -151,11 +161,15 @@ def report(run_dir_or_events) -> str:
             - sum(e["dur_us"] for e in cold)
         occ = occupancy.get(t)
         lanes = (f"{occ['alive']}/{occ['total']}" if occ else "-")
+        c = cost.get(t)
+        gflops = f"{c['flops'] / 1e9:8.2f}" if c else f"{'-':>8}"
+        gb = f"{c['bytes'] / 1e9:7.2f}" if c else f"{'-':>7}"
         lines.append(
             f"  {t:>10} {len(launches):9d} "
             f"{sum(e['attrs'].get('compile_delta', 0) for e in launches):9d}"
             f" {warm_us / 1e6:10.3f}"
-            f" {sum(e['dur_us'] for e in cold) / 1e6:10.3f} {lanes:>8}")
+            f" {sum(e['dur_us'] for e in cold) / 1e6:10.3f} {lanes:>8} "
+            f"{gflops} {gb}")
     return "\n".join(lines)
 
 
@@ -166,18 +180,28 @@ def main(argv=None) -> int:
     if not argv:
         print(usage, file=sys.stderr)
         return 2
-    if argv[0] == "report":
-        if len(argv) != 2:
+    # a missing/empty/truncated telemetry.jsonl (crash mid-chunk, wrong
+    # dir) is a user-facing condition, not a traceback: read_events raises
+    # FileNotFoundError/ValueError naming the path — print and exit 1
+    try:
+        if argv[0] == "report":
+            if len(argv) != 2:
+                print(usage, file=sys.stderr)
+                return 2
+            print(report(argv[1]))
+            return 0
+        if argv[0] == "export":
+            argv = argv[1:]
+        if not 1 <= len(argv) <= 2:
             print(usage, file=sys.stderr)
             return 2
-        print(report(argv[1]))
+        out = export(argv[0], *argv[1:])
+    except (FileNotFoundError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    except BrokenPipeError:
+        # `... report run/ | head` closes stdout early — not an error
         return 0
-    if argv[0] == "export":
-        argv = argv[1:]
-    if not 1 <= len(argv) <= 2:
-        print(usage, file=sys.stderr)
-        return 2
-    out = export(argv[0], *argv[1:])
     print(f"wrote {out} (load at https://ui.perfetto.dev)")
     return 0
 

@@ -1,0 +1,388 @@
+"""Round-probe plane tests (core/probes.py + the runtime drain).
+
+The load-bearing contract is that probes are *strictly observational*:
+running any driver (sync spatial/temporal, async, campaign) with
+``probes: {enabled: true}`` must produce bit-identical params to the same
+run with probes off, and probe values themselves must be deterministic
+across chunk sizes. On top of that: the probe catalogue lands complete in
+``probes.csv`` and as per-lane Perfetto counter tracks, the divergence
+sentinel fires on NaN/Inf (and ``on_divergence: freeze`` holds the lane at
+its last finite state without recompiling), the async drain adds the
+staleness histogram + buffer occupancy, compile launches record
+``program_cost`` (Lowered.cost_analysis), and the async ledger-digest
+cadence emits a chunking-invariant block count. Satellites: trace-report
+self-time edge cases and ``read_events`` tolerance of torn tails.
+"""
+import json
+import os
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.jobs import load_job
+from repro.core.probes import (PROBE_NAMES, ProbeSpec, buffer_occupancy,
+                               read_probes, staleness_hist)
+from repro.runtime.campaign import CampaignExecutor
+from repro.runtime.executor import Executor
+from repro.telemetry.recorder import read_events
+from repro.telemetry.trace import report, to_chrome_trace
+
+_PROBES_ON = {"enabled": True}
+
+
+def _raw(*, mode="sync", rounds=4, chunk=2, sweep=None, probes=None,
+         telemetry=None, seed=3, strategy="fedavg", **tp_extra):
+    tp = {"n_clients": 4, "local_epochs": 1, "client_lr": 0.1,
+          "rounds": rounds, "seed": seed, "rounds_per_launch": chunk}
+    runtime = {"straggler_prob": 0.2, "straggler_overprovision": 1.25}
+    if mode == "async":
+        tp.update({"mode": "async", "async_buffer": 3, "max_staleness": 4,
+                   "staleness_exponent": 0.5})
+        runtime = {"straggler_prob": 0.2, "duration_sigma": 0.25}
+    tp.update(tp_extra)
+    raw = {
+        "name": "probe-test",
+        "model": {"arch": "flsim-mlp"},
+        "dataset": {"dataset": "synthetic_vision", "n_items": 128,
+                    "distribution": {"partition": "dirichlet",
+                                     "dirichlet_alpha": 0.5}},
+        "strategy": {"strategy": strategy, "train_params": tp},
+        "runtime": runtime,
+    }
+    for key, val in (("sweep", sweep), ("probes", probes),
+                     ("telemetry", telemetry)):
+        if val is not None:
+            raw[key] = val
+    return raw
+
+
+def _params(state):
+    return jax.tree.map(np.asarray, state["params"])
+
+
+def _assert_bitwise_equal(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _run(raw):
+    ex = Executor(load_job(raw)).scaffold()
+    state, _ = ex.run()
+    return ex, state
+
+
+# ---------------------------------------------------------------------------
+# bitwise invariance: probes only consume, never perturb
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_bitwise_probes_on_vs_off(mode):
+    ex_on, s_on = _run(_raw(mode=mode, probes=_PROBES_ON))
+    _, s_off = _run(_raw(mode=mode))
+    _assert_bitwise_equal(_params(s_off), _params(s_on))
+    assert len(ex_on.probe_rows) == 4
+
+
+def test_bitwise_temporal_placement():
+    ex_on, s_on = _run(_raw(probes=_PROBES_ON, placement="temporal"))
+    _, s_off = _run(_raw(placement="temporal"))
+    _assert_bitwise_equal(_params(s_off), _params(s_on))
+    assert all(r["participation"] > 0 for r in ex_on.probe_rows)
+
+
+def test_bitwise_int8_and_quant_probes():
+    kw = dict(strategy="compressed", compression="int8",
+              error_feedback=True)
+    ex_on, s_on = _run(_raw(probes=_PROBES_ON, **kw))
+    _, s_off = _run(_raw(**kw))
+    _assert_bitwise_equal(_params(s_off), _params(s_on))
+    assert any(row["sat_frac"] > 0.0 for row in ex_on.probe_rows)
+    for row in ex_on.probe_rows:
+        assert 0.0 <= row["sat_frac"] <= 1.0
+    # error feedback is on by default: residual mass accumulates after
+    # round 0, so the probe must be a live (nonzero) signal
+    assert ex_on.probe_rows[-1]["ef_residual_norm"] > 0.0
+
+
+def test_campaign_bitwise_probes_on_vs_off():
+    sweep = {"seeds": [3, 5]}
+    c_off = CampaignExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    c_off.run()
+    c_on = CampaignExecutor(load_job(
+        _raw(sweep=sweep, probes=_PROBES_ON))).scaffold()
+    c_on.run()
+    for s in range(2):
+        _assert_bitwise_equal(c_off.trajectory_params(s),
+                              c_on.trajectory_params(s))
+    # one row per (lane, round), keyed by sweep coords like campaign.csv
+    assert len(c_on.probe_rows) == 2 * 4
+    assert {r["seed"] for r in c_on.probe_rows} == {3, 5}
+
+
+# ---------------------------------------------------------------------------
+# probe values: schema, determinism across chunkings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_probe_values_chunking_invariant(mode):
+    ex1, _ = _run(_raw(mode=mode, chunk=1, probes=_PROBES_ON))
+    ex4, _ = _run(_raw(mode=mode, chunk=4, probes=_PROBES_ON))
+    assert ex1.probe_rows == ex4.probe_rows
+
+
+def test_probe_row_schema():
+    ex, _ = _run(_raw(probes=_PROBES_ON))
+    for i, row in enumerate(ex.probe_rows):
+        assert row["round"] == i
+        assert set(PROBE_NAMES) <= set(row)
+        assert 0 < row["participation"] <= 4
+        assert 0.0 <= row["masked_frac"] <= 1.0
+        assert row["update_norm"] > 0.0
+        assert row["nonfinite"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# divergence sentinel: report fires, freeze holds the last finite state
+# ---------------------------------------------------------------------------
+
+def _finite(state):
+    return all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree.leaves(state["params"]))
+
+
+def test_divergence_sentinel_reports():
+    ex, state = _run(_raw(probes=_PROBES_ON, client_lr=1e8))
+    nf = [r["nonfinite"] for r in ex.probe_rows]
+    assert nf[0] == 0.0 and 1.0 in nf
+    assert not _finite(state)           # report mode does not intervene
+
+
+def test_divergence_freeze_holds_finite_state():
+    ex, state = _run(_raw(client_lr=1e8, probes={
+        "enabled": True, "on_divergence": "freeze"}))
+    assert any(r["nonfinite"] == 1.0 for r in ex.probe_rows)
+    assert _finite(state)               # frozen at the last finite params
+
+
+def test_freeze_is_bitwise_noop_without_divergence():
+    _, s_frz = _run(_raw(probes={"enabled": True,
+                                 "on_divergence": "freeze"}))
+    _, s_off = _run(_raw())
+    _assert_bitwise_equal(_params(s_off), _params(s_frz))
+
+
+# ---------------------------------------------------------------------------
+# drain plumbing: probes.csv, counter tracks, Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_probes_csv_and_counter_tracks(tmp_path):
+    ex, _ = _run(_raw(probes=_PROBES_ON,
+                      telemetry={"out_dir": str(tmp_path)}))
+    ex.recorder.close()
+    rows = read_probes(tmp_path / "probes.csv")
+    assert len(rows) == 4
+    assert rows == ex.probe_rows         # csv round-trips the full buffer
+    counters = {e["name"] for e in ex.recorder.events
+                if e.get("kind") == "counter"}
+    assert {f"probe:{n}" for n in PROBE_NAMES} <= counters
+    spans = {e["name"] for e in ex.recorder.events if e["kind"] == "span"}
+    assert "probe_flush" in spans
+    # counter samples are back-dated inside their launch span
+    launch = next(e for e in ex.recorder.events if e.get("name") == "launch")
+    sample = next(e for e in ex.recorder.events
+                  if e.get("name") == "probe:update_norm")
+    assert launch["t0_us"] <= sample["t_us"] \
+        <= launch["t0_us"] + launch["dur_us"]
+    # Perfetto export renders them as "C" counter events
+    tr = to_chrome_trace(read_events(tmp_path))
+    cs = [e for e in tr["traceEvents"]
+          if e["ph"] == "C" and e["name"] == "probe:update_norm"]
+    assert cs and all("value" in e["args"] for e in cs)
+
+
+def test_campaign_per_lane_counters_and_csv(tmp_path):
+    c = CampaignExecutor(load_job(_raw(
+        sweep={"seeds": [3, 5]},
+        telemetry={"out_dir": str(tmp_path)},
+        probes={"enabled": True, "out_dir": str(tmp_path)}))).scaffold()
+    c.run()
+    sample = next(e for e in c.recorder.events
+                  if e.get("name") == "probe:update_norm")
+    assert set(sample["values"]) == {"lane0", "lane1"}
+    rows = read_probes(tmp_path / "probes.csv")
+    assert len(rows) == 8
+    assert {(r["seed"], r["traj"]) for r in rows} == {(3, 0), (5, 1)}
+    assert all(set(PROBE_NAMES) <= set(r) for r in rows)
+
+
+def test_async_staleness_hist_and_occupancy(tmp_path):
+    ex, _ = _run(_raw(mode="async", probes=_PROBES_ON,
+                      telemetry={"out_dir": str(tmp_path)}))
+    hist = next(e for e in ex.recorder.events
+                if e.get("name") == "probe:staleness_hist")
+    assert sum(hist["values"].values()) > 0
+    assert all(k.startswith("s") for k in hist["values"])
+    assert all(0.0 <= r["buffer_occ"] <= ex.job.fl.async_buffer
+               for r in ex.probe_rows)
+
+
+def test_probes_memory_only_without_out_dir():
+    ex, _ = _run(_raw(probes=_PROBES_ON))
+    assert ex._probe_path() is None and len(ex.probe_rows) == 4
+
+
+# ---------------------------------------------------------------------------
+# helpers: occupancy / histogram host math
+# ---------------------------------------------------------------------------
+
+def test_buffer_occupancy_resets_on_apply():
+    occ = buffer_occupancy(np.array([1, 1, 0, 1, 1, 1]),
+                           np.array([0, 0, 0, 1, 0, 0]))
+    assert occ.tolist() == [1, 2, 2, 0, 1, 2]
+
+
+def test_staleness_hist_clips_to_max():
+    h = staleness_hist(np.array([0, 0, 1, 7, 9]), max_staleness=4)
+    assert h == {"s0": 2, "s1": 1, "s2": 0, "s3": 0, "s4": 2}
+
+
+# ---------------------------------------------------------------------------
+# program cost attribution (tentpole rider) + digest cadence (carried item)
+# ---------------------------------------------------------------------------
+
+def test_program_cost_recorded_on_compile_launch(tmp_path):
+    ex, _ = _run(_raw(telemetry={"out_dir": str(tmp_path)}))
+    cost = [e for e in ex.recorder.events
+            if e.get("name") == "program_cost"]
+    assert len(cost) == 1                # once per compiled program
+    assert cost[0]["values"]["flops"] > 0
+    assert cost[0]["values"]["bytes_accessed"] > 0
+    text = report([dict(e) for e in ex.recorder.events])
+    assert "gflops" in text and "GB" in text
+
+
+def test_program_cost_opt_out(tmp_path):
+    ex, _ = _run(_raw(telemetry={"out_dir": str(tmp_path),
+                                 "cost_analysis": False}))
+    assert not any(e.get("name") == "program_cost"
+                   for e in ex.recorder.events)
+
+
+def test_digest_cadence_chunking_invariant():
+    blocks = {}
+    for chunk in (1, 4):
+        raw = _raw(mode="async", chunk=chunk, digest_every_events=5)
+        raw["consensus"] = {"blockchain": "hashchain"}
+        ex, _ = _run(raw)
+        digests = [b for b in ex.job.ledger.blocks()
+                   if b.kind == "async_digest"]
+        # 4 rounds x 3 events/round = 12 events -> marks at 5, 10
+        assert [b.payload["event"] for b in digests] == [5, 10]
+        blocks[chunk] = len(digests)
+        assert ex._digest_blocks == len(digests)
+    assert blocks[1] == blocks[4] == 2
+
+
+def test_digest_cadence_span_and_counter(tmp_path):
+    raw = _raw(mode="async", digest_every_events=5,
+               telemetry={"out_dir": str(tmp_path)})
+    raw["consensus"] = {"blockchain": "hashchain"}
+    ex, _ = _run(raw)
+    spans = [e for e in ex.recorder.events
+             if e["kind"] == "span" and e["name"] == "digest"]
+    assert spans and sum(e["attrs"]["blocks"] for e in spans) == 2
+    ctr = [e for e in ex.recorder.events
+           if e.get("kind") == "counter" and e["name"] == "digest"]
+    assert ctr[-1]["values"]["blocks"] == 2
+
+
+# ---------------------------------------------------------------------------
+# job-loader validation of the probes: section
+# ---------------------------------------------------------------------------
+
+def test_probes_section_unknown_key():
+    with pytest.raises(KeyError, match="on_divergence"):
+        load_job(_raw(probes={"on_divergenc": "freeze"}))
+
+
+def test_probes_section_bad_on_divergence():
+    with pytest.raises(ValueError, match="report"):
+        load_job(_raw(probes={"enabled": True, "on_divergence": "halt"}))
+
+
+def test_probes_freeze_requires_enabled():
+    with pytest.raises(ValueError, match="enabled"):
+        load_job(_raw(probes={"enabled": False, "on_divergence": "freeze"}))
+
+
+def test_probe_spec_defaults_off():
+    spec = ProbeSpec.from_job(load_job(_raw()))
+    assert not spec.enabled and not spec.freeze
+
+
+# ---------------------------------------------------------------------------
+# satellite: trace-report self-time edge cases
+# ---------------------------------------------------------------------------
+
+def _span(id, name, t0, dur, parent=None, track="run", **attrs):
+    return {"kind": "span", "id": id, "parent": parent, "depth": 0,
+            "name": name, "track": track, "t0_us": t0, "dur_us": dur,
+            "attrs": attrs}
+
+
+def test_report_zero_duration_spans():
+    text = report([_span(1, "launch", 0, 0, compile_delta=1),
+                   _span(2, "eval", 0, 0)])
+    assert "compile" in text and "nan" not in text and "-0" not in text
+
+
+def test_report_children_exceeding_parent_clamp():
+    # child longer than its parent (clock skew): self time clamps to >= 0
+    # instead of subtracting a negative share from the category totals
+    text = report([_span(1, "chunk", 0, 10),
+                   _span(2, "launch", 0, 50, parent=1, compile_delta=0)])
+    host = next(line for line in text.splitlines()
+                if line.strip().startswith("host"))
+    assert " 0.000 " in host
+
+
+def test_report_counters_but_no_launches():
+    events = [_span(1, "eval", 0, 100),
+              {"kind": "counter", "name": "program_cost", "track": "run",
+               "t_us": 50, "values": {"flops": 1e9, "bytes_accessed": 1e8}}]
+    text = report(events)                # track row skipped, no crash
+    assert "io" in text and "launches" in text
+
+
+# ---------------------------------------------------------------------------
+# satellite: read_events tolerance of empty / torn telemetry.jsonl
+# ---------------------------------------------------------------------------
+
+def _jsonl(tmp_path, text):
+    (tmp_path / "telemetry.jsonl").write_text(text)
+    return tmp_path
+
+
+def test_read_events_empty_file_names_path(tmp_path):
+    with pytest.raises(ValueError, match="telemetry.jsonl"):
+        read_events(_jsonl(tmp_path, ""))
+
+
+def test_read_events_tolerates_torn_tail(tmp_path):
+    good = json.dumps({"kind": "meta", "run": "r"})
+    events = read_events(_jsonl(tmp_path, good + '\n{"kind": "sp'))
+    assert len(events) == 1 and events[0]["run"] == "r"
+
+
+def test_read_events_only_torn_line_raises(tmp_path):
+    with pytest.raises(ValueError, match="telemetry.jsonl"):
+        read_events(_jsonl(tmp_path, '{"kind": "sp'))
+
+
+def test_read_events_mid_file_corruption_raises(tmp_path):
+    good = json.dumps({"kind": "meta", "run": "r"})
+    with pytest.raises(ValueError, match="line 2"):
+        read_events(_jsonl(tmp_path, good + "\nnot json\n" + good + "\n"))
