@@ -154,6 +154,39 @@ def strategy_comparison(results, metric: str = "loss", out_png: str = None):
                           prefix="strategy")
 
 
+def time_to_accuracy(results, metric: str = "accuracy",
+                     seed_axis: str = "seed", out_png: str = None):
+    """Banded metric-vs-simulated-wall-clock curves (comms observatory).
+
+    Needs a comms-accounted campaign table: the ``sim_time_s`` column the
+    executor joins onto the result rows becomes the x-axis, grouped like
+    ``campaign_curves`` (every sweep coordinate except ``seed_axis``). Rows
+    missing either column (comms off, non-eval rounds for eval metrics)
+    are skipped."""
+    return _axis_curves(results, metric, seed_axis, out_png,
+                        x_key="sim_time_s", prefix="time_to_acc")
+
+
+def bytes_to_accuracy(results, metric: str = "accuracy",
+                      seed_axis: str = "seed", out_png: str = None):
+    """Banded metric-vs-cumulative-wire-bytes curves (comms observatory):
+    the ``cum_bytes`` column as x-axis — the figure that shows int8/topk
+    lanes reaching a given accuracy on a fraction of the dense traffic."""
+    return _axis_curves(results, metric, seed_axis, out_png,
+                        x_key="cum_bytes", prefix="bytes_to_acc")
+
+
+def _axis_curves(results, metric, seed_axis, out_png, x_key, prefix):
+    from repro.core.sweeps import KNOWN_AXES
+    results = _load_rows(results)
+    if not results:
+        return []
+    group_keys = [k for k in KNOWN_AXES
+                  if k != seed_axis and k in results[0]]
+    return _banded_curves(results, group_keys, metric, out_png,
+                          prefix=prefix, x_key=x_key)
+
+
 def _load_rows(results):
     if isinstance(results, (str, bytes)) or hasattr(results, "read_text"):
         from repro.runtime.campaign import read_results
@@ -165,26 +198,37 @@ def _fmt_coord(k, v) -> str:
     return f"{k}={v:g}" if isinstance(v, (int, float)) else f"{k}={v}"
 
 
-def _banded_curves(results, group_keys, metric, out_png, prefix):
-    """Shared tidy-rows -> mean±band grouping behind the figure entries."""
+def _banded_curves(results, group_keys, metric, out_png, prefix,
+                   x_key=None):
+    """Shared tidy-rows -> mean±band grouping behind the figure entries.
+
+    ``x_key`` (default: the round index) picks the x-axis column — curves
+    still group and aggregate per round (the deterministic alignment key),
+    then plot each round at the group's mean ``x_key`` value, which is how
+    the time-/bytes-to-accuracy figures reuse the same banding."""
     import collections
 
     groups = collections.defaultdict(lambda: collections.defaultdict(list))
+    xs = collections.defaultdict(lambda: collections.defaultdict(list))
     for r in results:
-        if metric not in r:
+        if metric not in r or (x_key is not None and x_key not in r):
             continue
         g = tuple((k, r.get(k)) for k in group_keys)
         groups[g][int(r["round"])].append(float(r[metric]))
+        if x_key is not None:
+            xs[g][int(r["round"])].append(float(r[x_key]))
     out = []
     for g, per_round in sorted(groups.items(), key=str):
         rounds = sorted(per_round)
         mean = np.asarray([np.mean(per_round[r]) for r in rounds])
         std = np.asarray([np.std(per_round[r]) for r in rounds])
+        x = (rounds if x_key is None
+             else [float(np.mean(xs[g][r])) for r in rounds])
         label = ",".join(_fmt_coord(k, v) for k, v in g) or "all"
         print(f"{prefix}_{label},{len(rounds)},"
               f"{metric}_final={mean[-1]:.4f}±{std[-1]:.4f};"
               f"n_runs={len(per_round[rounds[0]])}", flush=True)
-        out.append({"group": dict(g), "rounds": rounds,
+        out.append({"group": dict(g), "rounds": rounds, "x": list(x),
                     "mean": mean.tolist(), "std": std.tolist()})
     if out_png and out:
         try:
@@ -198,10 +242,10 @@ def _banded_curves(results, group_keys, metric, out_png, prefix):
             m, s = np.asarray(curve["mean"]), np.asarray(curve["std"])
             label = ",".join(_fmt_coord(k, v)
                              for k, v in curve["group"].items())
-            line, = ax.plot(curve["rounds"], m, label=label or "all")
-            ax.fill_between(curve["rounds"], m - s, m + s, alpha=0.2,
+            line, = ax.plot(curve["x"], m, label=label or "all")
+            ax.fill_between(curve["x"], m - s, m + s, alpha=0.2,
                             color=line.get_color())
-        ax.set_xlabel("round")
+        ax.set_xlabel(x_key or "round")
         ax.set_ylabel(metric)
         ax.legend(fontsize=7)
         fig.tight_layout()

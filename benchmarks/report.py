@@ -39,6 +39,11 @@ BENCH_CONTRACTS = {
     "BENCH_probes": (0.9,
                      "campaign with round probes + recorder vs both off",
                      lambda r: r["speedup_on_vs_off"]),
+    # 0.95x = the comms observatory (pure host accounting + recorder)
+    # may cost at most 5% on the chunk=1 worst case
+    "BENCH_comms": (0.95,
+                    "campaign with comms accounting + recorder vs both off",
+                    lambda r: r["speedup_on_vs_off"]),
 }
 
 

@@ -94,6 +94,12 @@ def main() -> None:
         # Also writes the probes_smoke/ trace + probes.csv CI uploads
         "probes": lambda: flbench.bench_probes(
             rounds=8 if q else 16, reps=3 if q else 4),
+        # comms-observatory + recorder overhead at chunk=1 (worst case: the
+        # host accountants + drain run at every boundary); --quick keeps
+        # the S=8 grid and cuts rounds/reps. Also writes the comms_smoke/
+        # trace + comms.csv CI uploads
+        "comms": lambda: flbench.bench_comms(
+            rounds=8 if q else 16, reps=3 if q else 4),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

@@ -33,6 +33,12 @@ def _projection(leaf_idx: int, width: int, n_proj: int):
     return jax.random.normal(jax.random.PRNGKey(leaf_idx), (n_proj, width))
 
 
+def digest_nbytes(n_proj: int = 4) -> int:
+    """Wire bytes of one digest vote: ``n_proj`` f32 projections (the comms
+    plane bills consensus voting at this size, phase 2 of the pipeline)."""
+    return 4 * n_proj
+
+
 def digest(tree, n_proj: int = 4) -> jnp.ndarray:
     """Deterministic fingerprint: projections of the flattened pytree."""
     acc = jnp.zeros((n_proj,), jnp.float32)

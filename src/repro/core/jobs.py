@@ -55,13 +55,16 @@ _STRATEGY_KEYS = {"strategy", "train_params", "aggregator_params"}
 # not yet consumed) + model, the campaign sweep, and the flight recorder
 _TOP_KEYS = {"name", "model", "dataset", "consensus", "strategy", "runtime",
              "sweep", "clusters", "node_defaults", "node_configs",
-             "telemetry", "probes"}
+             "telemetry", "probes", "comms"}
 # flight-recorder knobs (repro/telemetry): presence of the section turns
 # the recorder on (enabled: false to keep a section but switch it off)
 _TELEMETRY_KEYS = {"enabled", "out_dir", "profile_chunks", "cost_analysis"}
 # round-probe knobs (core/probes.py): presence of the section compiles the
 # probe outputs into the round/event scans (enabled: false to switch off)
 _PROBES_KEYS = {"enabled", "out_dir", "on_divergence"}
+# comms-observatory knobs (telemetry/comms.py): host-side wire-traffic
+# accounting; the LinkModel knobs themselves are runtime: section fields
+_COMMS_KEYS = {"enabled", "out_dir", "pods"}
 
 
 def _check_keys(section_name: str, section, allowed) -> None:
@@ -111,7 +114,12 @@ def make_fault(raw: dict, fl: FLConfig) -> ClientSystemModel:
         mean_duration=rt.get("mean_duration", 1.0),
         duration_sigma=rt.get("duration_sigma", 0.25),
         rate_spread=rt.get("rate_spread", 0.0),
-        availability=rt.get("availability", 1.0))
+        availability=rt.get("availability", 1.0),
+        up_mbps=rt.get("up_mbps", 100.0),
+        down_mbps=rt.get("down_mbps", 400.0),
+        link_tiers=rt.get("link_tiers", 1),
+        link_tier_factor=rt.get("link_tier_factor", 0.5),
+        latency_s=rt.get("latency_s", 0.01))
 
 
 def rebind(job: Job, fl: FLConfig) -> Job:
@@ -155,6 +163,14 @@ def load_job(path_or_dict) -> Job:
     _check_keys("runtime", rt, _FL_KEYS | _CSM_KEYS)
     _check_keys("telemetry", raw.get("telemetry"), _TELEMETRY_KEYS)
     _check_keys("probes", raw.get("probes"), _PROBES_KEYS)
+    _check_keys("comms", raw.get("comms"), _COMMS_KEYS)
+    if raw.get("comms"):
+        # value validation (pods >= 1) lives in CommsSpec; running it here
+        # fails at load time, naming the YAML
+        from repro.telemetry.comms import CommsSpec
+        c = raw["comms"]
+        CommsSpec(enabled=bool(c.get("enabled", True)),
+                  out_dir=c.get("out_dir"), pods=int(c.get("pods", 1)))
     if raw.get("probes"):
         # value validation (on_divergence enum, freeze-needs-enabled) lives
         # in ProbeSpec; running it here fails at load time, naming the YAML

@@ -50,6 +50,14 @@ def packed_size(template, qblock: int = QBLOCK) -> tuple[int, int]:
     return n, n // qblock
 
 
+def packed_nbytes(template, qblock: int = QBLOCK) -> int:
+    """Wire bytes of one packed delta: 1 byte per int8 value + 4 bytes per
+    f32 block scale — what a ``compression: int8`` client actually sends
+    (~dense/4 + 1/qblock scale overhead; the comms plane's int8 payload)."""
+    n, n_blocks = packed_size(template, qblock)
+    return n + 4 * n_blocks
+
+
 def pack_tree(tree, qblock: int = QBLOCK) -> jax.Array:
     """Flatten a pytree to (N,) f32, zero-padding each leaf to whole blocks."""
     pieces = []

@@ -105,6 +105,13 @@ class Decentralized:
         return self.mix(ctx, deltas)
 
 
+# neighbours each client exchanges with per gossip step (the meshless ring
+# rolls ±1; the comms byte model in core/netmodel.py counts sends off it)
+GOSSIP_NEIGHBORS = 2
+
+_TOPOLOGIES = ("client_server", "hierarchical", "decentralized")
+
+
 def get_topology(name: str, gossip_steps: int = 1):
     if name == "client_server":
         return ClientServer()
@@ -112,4 +119,8 @@ def get_topology(name: str, gossip_steps: int = 1):
         return Hierarchical()
     if name == "decentralized":
         return Decentralized(gossip_steps=gossip_steps)
-    raise KeyError(name)
+    import difflib
+    hint = difflib.get_close_matches(name, _TOPOLOGIES, n=1)
+    suffix = (f" — did you mean {hint[0]!r}?" if hint
+              else f"; known topologies: {list(_TOPOLOGIES)}")
+    raise ValueError(f"unknown topology {name!r}{suffix}")

@@ -78,6 +78,7 @@ from repro.core.rounds import init_state
 from repro.data.pipeline import DEDUP_STAGED_AXES, stage_partitions_dedup
 from repro.launch.mesh import lane_mesh, shard_lanes
 from repro.runtime.executor import Executor
+from repro.telemetry import comms as comms_mod
 
 _INT_COLS = ("seed", "traj", "round", "bucket", "lane", "async_buffer")
 
@@ -490,7 +491,9 @@ class CampaignExecutor(Executor):
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
         self._capture_probes(start, n, metrics.pop("probes", None))
+        cols = self._account_comms(start, n)
         stacked = {k: np.asarray(v) for k, v in metrics.items()}  # (S, n)
+        self._merge_comms_stacked(stacked, cols)
         return self._table_rows(stacked, start, n, dt)
 
     def _launch_async(self, start: int, n: int):
@@ -519,10 +522,23 @@ class CampaignExecutor(Executor):
                 hists={f"probe:staleness_hist:lane{s}": staleness_hist(
                     ev["staleness"][s], self.job.fl.max_staleness)
                     for s in self.alive_lanes()})
+        cols = self._account_comms(start, n)
         stacked = {"loss": ev["loss"].mean(-1),
                    "staleness": ev["staleness"].mean(-1),
-                   "applied": ev["applied"].sum(-1)}
+                   "applied": ev["applied"].sum(-1),
+                   # per-lane virtual arrival time at each round window's
+                   # last event (each lane reads its own schedule): async
+                   # curves plot against virtual time even with comms off
+                   "vtime": self._lane_vtime(start, n)}
+        self._merge_comms_stacked(stacked, cols)
         return self._table_rows(stacked, start, n, dt)
+
+    def _lane_vtime(self, start: int, n: int) -> np.ndarray:
+        """(S_pad, n) virtual time at each round window's closing event."""
+        epr = self.events_per_round
+        idx = (start + np.arange(1, n + 1)) * epr - 1
+        return np.stack([np.asarray(sc.vtime, np.float64)[idx]
+                         for sc in self.schedules])
 
     def _async_probe_extras(self, start: int, n: int):
         """Per-lane buffer occupancy off each lane's own schedule."""
@@ -610,15 +626,91 @@ class CampaignExecutor(Executor):
     def _probe_lead_columns(self):
         return [*self.spec.names, "traj", "round"]
 
+    # -- comms plane: per-lane accountants ---------------------------------
+    def _comms_setup(self):
+        """One ``LaneComms`` accountant per (padded) lane, built from the
+        lane's own expanded config + fault model — byte gating and the
+        simulated clock see exactly the swept seeds/knobs the compiled
+        program runs. All lanes in a bucket share the program signature, so
+        one shape template (lane dim stripped; decentralized states also
+        strip the per-client dim) serves every accountant."""
+        if not self.comms_spec.enabled:
+            return
+        from repro.core.netmodel import shape_template
+        tpl = shape_template(self.state["params"], strip_leading=True)
+        if self.job.fl.topology == "decentralized":
+            tpl = shape_template(tpl, strip_leading=True)
+        self._comms = [comms_mod.LaneComms(
+            fl=fl_s, csm=make_fault(self.job.raw, fl_s), template=tpl,
+            pods=self.comms_spec.pods) for fl_s in self._fls_pad]
+
+    def _account_comms(self, start: int, n: int):
+        """Advance every lane's accountant: alive lanes account their
+        rounds (async lanes off their own deduped schedule), dead/padded
+        lanes emit frozen columns — mirroring ``freeze_unless`` so a
+        dropped lane's cumulative bytes hold at the drop round. Rows land
+        keyed like campaign.csv (coords + traj + round), alive lanes
+        only."""
+        if self._comms is None:
+            return None
+        per = []
+        for s, lane in enumerate(self._comms):
+            if self.alive[s] > 0:
+                if self.mode == "async":
+                    per.append(lane.async_rounds(start, n,
+                                                 self.schedules[s],
+                                                 self.events_per_round))
+                else:
+                    per.append(lane.sync_rounds(start, n))
+            else:
+                per.append(lane.frozen(n))
+        cols = {k: np.stack([p[k] for p in per]) for k in per[0]}
+        items = sorted(cols.items())
+        alive = self.alive_lanes()
+        self._comms_lanes = [(s, f"lane{s}") for s in alive]
+        for s in alive:
+            coords = dict(self.coords[s], traj=s)
+            for i in range(n):
+                row = dict(coords, round=start + i)
+                row.update((k, float(col[s][i])) for k, col in items)
+                self.comms_rows.append(row)
+        self._pending_comms = (start, n, cols)
+        return cols
+
+    def _merge_comms_stacked(self, stacked: dict, cols):
+        """Join the (S_pad, n) simulated-time / cumulative-byte planes into
+        the stacked metrics — ``_table_rows`` then lands them per (lane,
+        round) in the results table (the time-to-accuracy / bytes-to-
+        accuracy x-axes) and as alive-lane means in the logger rows."""
+        if cols:
+            stacked.update({k: cols[k] for k in comms_mod.RESULT_COLUMNS})
+
+    def _comms_series(self, m, i: int) -> dict:
+        """One counter series per alive lane -> per-lane Perfetto tracks
+        (``compression: [none, int8]`` sweeps render side by side)."""
+        return {label: float(m[s][i]) for s, label in self._comms_lanes}
+
+    def _comms_summaries(self) -> list:
+        """Run-level ``comms_total`` payloads, one per real lane."""
+        if self._comms is None:
+            return []
+        return [dict(self._comms[s].summary(), lane=s)
+                for s in range(self.S)]
+
+    def _comms_lead_columns(self):
+        return [*self.spec.names, "traj", "round"]
+
     def _digest_record(self, event_mark: int, last: int):
         """Async digest cadence, per alive trajectory lane (same reasoning
-        as ``_ledger_record``: digests must certify per-run params)."""
+        as ``_ledger_record``: digests must certify per-run params). Each
+        block carries its lane's virtual arrival time at the event mark."""
         for s in self.alive_lanes():
             params_s = jax.tree.map(lambda t: t[s], self.state["params"])
             self._digest_blocks += 1
             self.job.ledger.append(
                 last, "async_digest",
                 {"event": int(event_mark), "traj": s,
+                 "vtime": float(self.schedules[s].vtime[event_mark - 1]),
                  "digest": param_digest(params_s)})
 
     # -- flight-recorder hooks ---------------------------------------------

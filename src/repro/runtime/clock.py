@@ -41,8 +41,11 @@ from repro.runtime.faults import FaultModel
 
 _F32 = np.float32
 
-# Philox stream tags (second 64-bit key word, high half).
-_TAG_RATE, _TAG_JITTER, _TAG_STRAGGLER, _TAG_AVAIL = 1, 2, 3, 4
+# Philox stream tags (second 64-bit key word, high half). _TAG_LINK is the
+# comms observatory's bandwidth-tier stream (core/netmodel.py): a NEW tag,
+# so adding a LinkModel never re-deals the rate/jitter/straggler/avail
+# columns — existing schedules stay prefix-stable link knobs on or off.
+_TAG_RATE, _TAG_JITTER, _TAG_STRAGGLER, _TAG_AVAIL, _TAG_LINK = 1, 2, 3, 4, 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,11 +63,30 @@ class ClientSystemModel(FaultModel):
       (device heterogeneity, not per-task noise);
     - ``availability``: probability a finished task's update is usable
       (an unavailable arrival is rejected: zero weight, no buffer slot).
+
+    The link fields are the **LinkModel** (core/netmodel.py): per-client
+    up/down bandwidth tiers + per-transfer latency, consumed only by the
+    host-side comms accounting plane — the event schedule never reads them,
+    so two runs differing only in link knobs share bitwise-identical
+    schedules (regression-tested in tests/test_comms.py):
+
+    - ``up_mbps`` / ``down_mbps``: top-tier client bandwidth (Mbit/s of
+      *virtual* time, the same unit as ``mean_duration``);
+    - ``link_tiers``: number of bandwidth classes; each client draws its
+      tier from the ``_TAG_LINK`` Philox stream (1 = homogeneous);
+    - ``link_tier_factor``: bandwidth multiplier per tier below the top
+      (tier t gets ``factor**t``);
+    - ``latency_s``: fixed per-transfer latency (virtual seconds).
     """
     mean_duration: float = 1.0
     duration_sigma: float = 0.25
     rate_spread: float = 0.0
     availability: float = 1.0
+    up_mbps: float = 100.0
+    down_mbps: float = 400.0
+    link_tiers: int = 1
+    link_tier_factor: float = 0.5
+    latency_s: float = 0.01
 
 
 def _column(seed: int, tag: int, task: int, draw, n: int):
@@ -88,12 +110,24 @@ def client_rates(csm: ClientSystemModel, n_clients: int) -> np.ndarray:
 
 def _dur_column(csm: ClientSystemModel, rate: np.ndarray,
                 t: int) -> np.ndarray:
-    """Durations of every client's task ``t``: rate * lognormal * straggler."""
+    """Durations of every client's task ``t``: rate * lognormal * straggler.
+
+    Degenerate knobs skip their Philox column entirely — the output is
+    identical (``sigma == 0`` zeroes the exponent, ``straggler_prob == 0``
+    makes the where-mask all-False regardless of ``u``) and per-(tag, task)
+    keying means an unconsumed column never shifts any other draw. Philox
+    construction is the host cost of the comms plane's makespan replay, so
+    the common no-straggler case pays one column, not two."""
     n = rate.shape[0]
-    z = _column(csm.seed, _TAG_JITTER, t,
-                lambda g, m: g.standard_normal(m), n)
+    if csm.duration_sigma != 0.0:
+        z = _column(csm.seed, _TAG_JITTER, t,
+                    lambda g, m: g.standard_normal(m), n)
+        d = csm.mean_duration * rate * np.exp(csm.duration_sigma * z)
+    else:
+        d = csm.mean_duration * rate
+    if csm.straggler_prob <= 0.0:
+        return np.asarray(d, _F32)
     u = _column(csm.seed, _TAG_STRAGGLER, t, lambda g, m: g.random(m), n)
-    d = csm.mean_duration * rate * np.exp(csm.duration_sigma * z)
     return np.where(u < csm.straggler_prob,
                     d * csm.straggler_slowdown, d).astype(_F32)
 
@@ -191,6 +225,16 @@ def build_schedule(csm: ClientSystemModel, n_clients: int, n_events: int,
     """
     E = int(n_events)
     C = int(n_clients)
+    # degenerate inputs fail loudly, naming the field: E <= 0 used to
+    # return a silently-empty schedule and C == 0 crashed the event loop
+    # with a bare IndexError off the empty dispatch heap
+    if E <= 0:
+        raise ValueError(f"build_schedule needs n_events > 0, got "
+                         f"{n_events} (fl.rounds * events_per_round must "
+                         "be positive)")
+    if C <= 0:
+        raise ValueError(f"build_schedule needs n_clients > 0, got "
+                         f"{n_clients} (no clients to dispatch)")
     K = max(int(buffer_size), 1)
     M = C if concurrency <= 0 else min(int(concurrency), C)
     ring = int(max_staleness) + 1

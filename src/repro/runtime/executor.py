@@ -50,6 +50,7 @@ from repro.data.pipeline import stage_partitions
 from repro.kernels import ops as kernel_ops
 from repro.metrics.logger import PerformanceLogger, host_usage
 from repro.sharding.axes import AxisCtx
+from repro.telemetry import comms as comms_mod
 from repro.telemetry.recorder import FlightRecorder
 
 
@@ -82,6 +83,16 @@ class Executor:
         self._probe_flushed = 0
         self._probe_table = None
         self._pending_probes = None       # launch stash for the drain
+        # Comms observatory (telemetry/comms.py): a ``comms:`` job section
+        # turns on host-side wire-traffic accounting + the simulated
+        # wall-clock; accountants are built at scaffold (they need the
+        # param template). Pure host bookkeeping — bitwise comms on == off.
+        self.comms_spec = comms_mod.CommsSpec.from_job(self.job)
+        self.comms_rows = []              # tidy per-round comms rows
+        self._comms = None                # per-lane LaneComms accountants
+        self._comms_flushed = 0
+        self._comms_table = None
+        self._pending_comms = None        # launch stash for the drain
         self._digest_blocks = 0           # async ledger-digest cadence
         # per-program FLOPs/bytes off the lowered computation (telemetry
         # report's program table); ``cost_analysis: false`` opts out
@@ -214,8 +225,25 @@ class Executor:
             with rec.span("restore", track=track):
                 self._maybe_restore()
             self._post_restore()
+            self._comms_setup()
             self._record_plane_bytes()
         return self
+
+    def _comms_setup(self):
+        """Build the comms accountant (campaigns override: one per lane).
+        Needs the scaffolded param template; cumulative counters start at
+        zero, so a checkpoint resume accounts only post-resume rounds."""
+        if not self.comms_spec.enabled:
+            return
+        from repro.core.netmodel import shape_template
+        fl = self.job.fl
+        # decentralized params carry a per-client leading dim; the byte
+        # model prices ONE model's exchange
+        tpl = shape_template(self.state["params"],
+                             strip_leading=fl.topology == "decentralized")
+        self._comms = [comms_mod.LaneComms(
+            fl=fl, csm=self.job.fault, template=tpl,
+            pods=self.comms_spec.pods)]
 
     def _record_plane_bytes(self):
         """Counter: device bytes staged per plane (data idx/len + roots,
@@ -290,6 +318,8 @@ class Executor:
                     batched_fallbacks=qframe["batched_fallbacks"])
         rec.counter("programs", track=self.telemetry_track,
                     compiled=self.compiled_programs())
+        for values in self._comms_summaries():
+            rec.counter("comms_total", track=self.telemetry_track, **values)
         rec.flush()
         return out
 
@@ -340,6 +370,7 @@ class Executor:
         self._record_lane_telemetry()
         self._record_program_cost(sp)
         self._drain_probe_counters(sp._t0, rec._now_us())
+        self._drain_comms_counters(sp._t0, rec._now_us())
         return rows
 
     def _record_program_cost(self, sp):
@@ -437,6 +468,65 @@ class Executor:
         occ = self._occupancy[start * epr:(start + n) * epr]
         return {"buffer_occ": occ.reshape(n, epr).mean(-1)}
 
+    # -- comms drain (telemetry/comms.py) ---------------------------------
+    def _account_comms(self, start: int, n: int):
+        """Advance the comms accountant over this launch's rounds: tidy
+        rows buffer now (flushed to comms.csv at the chunk boundary),
+        counter samples at ``_drain_comms_counters``. Returns the per-round
+        column dict (the launch merges ``sim_time_s``/``cum_bytes`` into
+        its result rows) or None with comms off."""
+        if self._comms is None:
+            return None
+        lane = self._comms[0]
+        if self.mode == "async":
+            cols = lane.async_rounds(start, n, self.schedule,
+                                     self.events_per_round)
+        else:
+            cols = lane.sync_rounds(start, n)
+        items = sorted(cols.items())
+        for i in range(n):
+            row = {"round": start + i}
+            row.update((k, float(col[i])) for k, col in items)
+            self.comms_rows.append(row)
+        self._pending_comms = (start, n, cols)
+        return cols
+
+    def _merge_comms(self, rows, cols, n: int):
+        """Join the simulated-time / cumulative-byte columns onto the
+        launch's result rows — eval metrics merged into the same rows then
+        plot directly as time-to-accuracy / bytes-to-accuracy curves."""
+        if cols:
+            for i in range(n):
+                rows[i].update({k: float(cols[k][i])
+                                for k in comms_mod.RESULT_COLUMNS})
+        return rows
+
+    def _drain_comms_counters(self, t0_us: int, t1_us: int):
+        """Perfetto "C" tracks: cumulative per-direction bytes + the
+        virtual-time track (campaigns: one series per alive lane),
+        back-dated across the launch span like the probe counters."""
+        pend, self._pending_comms = self._pending_comms, None
+        if pend is None or not self.recorder.enabled:
+            return
+        start, n, cols = pend
+        rec, track = self.recorder, self.telemetry_track
+        for i in range(n):
+            t = int(t0_us + (t1_us - t0_us) * (i + 1) / n)
+            for name in comms_mod.COUNTER_COLUMNS:
+                rec.counter(f"comms:{name}", track=track, t_us=t,
+                            **self._comms_series(cols[name], i))
+
+    def _comms_series(self, m, i: int) -> dict:
+        """Counter series for round ``i`` (campaigns: one per alive lane)."""
+        return {"value": float(m[i])}
+
+    def _comms_summaries(self) -> list:
+        """Run-level ``comms_total`` counter payloads (campaigns: one per
+        lane, tagged with its index)."""
+        if self._comms is None:
+            return []
+        return [self._comms[0].summary()]
+
     def _telemetry_attrs(self) -> dict:
         """Driver-specific launch-span attrs (campaigns: lane occupancy)."""
         return {}
@@ -454,9 +544,11 @@ class Executor:
         self.state = jax.block_until_ready(state)
         dt = time.time() - t0
         self._capture_probes(start, n, metrics.pop("probes", None))
+        cols = self._account_comms(start, n)
         stacked = {k: np.asarray(v) for k, v in metrics.items()}
-        return [dict({k: float(v[i]) for k, v in stacked.items()},
-                     round_s=dt / n) for i in range(n)]
+        return self._merge_comms(
+            [dict({k: float(v[i]) for k, v in stacked.items()},
+                  round_s=dt / n) for i in range(n)], cols, n)
 
     def _launch_async(self, start: int, n: int):
         """An async "round" is ``events_per_round`` server events; only the
@@ -481,12 +573,18 @@ class Executor:
                 start, n, probes, extra=self._async_probe_extras(start, n),
                 hists={"probe:staleness_hist": staleness_hist(
                     stacked["staleness"], self.job.fl.max_staleness)})
-        return [{"loss": float(stacked["loss"][i].mean()),
-                 "staleness": float(stacked["staleness"][i].mean()),
-                 "applied": float(stacked["applied"][i].sum()),
-                 "round_s": dt / n,
-                 "events_per_s": n_ev / max(dt, 1e-9)}
-                for i in range(n)]
+        cols = self._account_comms(start, n)
+        # virtual arrival time at each round window's last event: async
+        # curves plot against virtual time even with comms accounting off
+        vt = self.schedule.vtime
+        return self._merge_comms(
+            [{"loss": float(stacked["loss"][i].mean()),
+              "staleness": float(stacked["staleness"][i].mean()),
+              "applied": float(stacked["applied"][i].sum()),
+              "vtime": float(vt[(start + i + 1) * epr - 1]),
+              "round_s": dt / n,
+              "events_per_s": n_ev / max(dt, 1e-9)}
+             for i in range(n)], cols, n)
 
     def _check_async_horizon(self, rounds: int):
         """Horizon grew past the scaffolded schedule? Regenerating is only
@@ -529,6 +627,10 @@ class Executor:
                 len(self.probe_rows) > self._probe_flushed:
             with rec.span("probe_flush", track=track):
                 self._flush_probes()
+        if self.comms_spec.enabled and \
+                len(self.comms_rows) > self._comms_flushed:
+            with rec.span("comms_flush", track=track):
+                self._flush_comms()
         if self.mode == "async" and fl.digest_every_events > 0 and \
                 self.job.ledger is not None:
             self._digest_cadence(start, n, last)
@@ -582,6 +684,40 @@ class Executor:
             self._probe_table = ProbeTable(path, self._probe_lead_columns())
         self._probe_table.flush(new)
 
+    # -- comms.csv ---------------------------------------------------------
+    def _comms_lead_columns(self):
+        return ["round"]
+
+    def _comms_path(self) -> Optional[pathlib.Path]:
+        """Where comms.csv lands: the ``comms.out_dir`` knob, else the
+        telemetry out_dir, else the executor's own out_dir/ckpt_dir (rows
+        stay memory-only when none is set); planner buckets suffix the
+        track like probes.csv."""
+        out = self.comms_spec.out_dir or \
+            (self.recorder.out_dir if self.recorder.enabled else None) or \
+            getattr(self, "out_dir", None) or self.ckpt_dir
+        if out is None:
+            return None
+        name = ("comms.csv" if self.telemetry_track == "run"
+                else f"comms_{self.telemetry_track}.csv")
+        return pathlib.Path(out) / name
+
+    def _flush_comms(self):
+        """Append the rows buffered since the last boundary to comms.csv
+        (tidy, keyed like campaign.csv); ``self.comms_rows`` keeps the full
+        in-memory view either way. The column set is fixed
+        (netmodel.COMMS_COLUMNS), so ProbeTable's append-only writer fits."""
+        new = self.comms_rows[self._comms_flushed:]
+        self._comms_flushed = len(self.comms_rows)
+        if not new:
+            return
+        if self._comms_table is None:
+            path = self._comms_path()
+            if path is None:
+                return
+            self._comms_table = ProbeTable(path, self._comms_lead_columns())
+        self._comms_table.flush(new)
+
     # -- async ledger-digest cadence (ROADMAP carried item) ----------------
     def _digest_cadence(self, start: int, n: int, last: int):
         """Emit one ledger digest block per ``digest_every_events`` mark the
@@ -602,11 +738,14 @@ class Executor:
         rec.counter("digest", track=track, blocks=self._digest_blocks)
 
     def _digest_record(self, event_mark: int, last: int):
-        """One digest block (campaigns override: one per alive lane)."""
+        """One digest block (campaigns override: one per alive lane). The
+        block carries the virtual arrival time of its event mark, so ledger
+        rows line up with the async virtual-time axis."""
         self._digest_blocks += 1
         self.job.ledger.append(
             last, "async_digest",
             {"event": int(event_mark),
+             "vtime": float(self.schedule.vtime[event_mark - 1]),
              "digest": param_digest(self.state["params"])})
 
     def _ledger_record(self, last: int):

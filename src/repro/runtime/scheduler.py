@@ -202,6 +202,9 @@ class PlanExecutor:
             if any(ex.probe_rows for ex in self.execs):
                 with rec.span("probe_flush", track="plan"):
                     self.write_probes()
+            if any(ex.comms_rows for ex in self.execs):
+                with rec.span("comms_flush", track="plan"):
+                    self.write_comms()
         rec.flush()
         return self
 
@@ -351,6 +354,34 @@ class PlanExecutor:
         out = pathlib.Path(out_dir or self.out_dir or ".")
         out.mkdir(parents=True, exist_ok=True)
         table = ProbeTable(out / "probes.csv",
+                           ["bucket", "lane", *self.plan.spec.names,
+                            "traj", "round"])
+        return table.flush(rows)
+
+    def comms_rows(self) -> list:
+        """The merged comms table: every bucket's comms rows keyed like the
+        merged results — (bucket, global lane, sweep coords, traj, round)
+        — in (round, lane) order. The per-bucket ``comms_bucket<i>.csv``
+        files stay the incrementally-flushed artifacts."""
+        out = []
+        for bucket, ex in zip(self.plan.buckets, self.execs):
+            for row in ex.comms_rows:
+                out.append({"bucket": bucket.index,
+                            "lane": bucket.lane_ids[row["traj"]], **row})
+        out.sort(key=lambda r: (r["round"], r["lane"]))
+        return out
+
+    def write_comms(self, out_dir=None):
+        """Write the merged ``comms.csv`` (the lockstep loop calls this at
+        the end of a comms-accounted run; also an explicit export entry
+        point)."""
+        from repro.core.probes import ProbeTable
+        rows = self.comms_rows()
+        if not rows:
+            return None
+        out = pathlib.Path(out_dir or self.out_dir or ".")
+        out.mkdir(parents=True, exist_ok=True)
+        table = ProbeTable(out / "comms.csv",
                            ["bucket", "lane", *self.plan.spec.names,
                             "traj", "round"])
         return table.flush(rows)

@@ -35,7 +35,8 @@ _CATEGORY = {
     "init_state": "init",
     "restore": "io", "checkpoint_save": "io", "ledger": "io", "eval": "io",
     "table_flush": "io", "parquet": "io", "scheduler": "io",
-    "finish_chunk": "io", "probe_flush": "io", "digest": "io",
+    "finish_chunk": "io", "probe_flush": "io", "comms_flush": "io",
+    "digest": "io",
     "scaffold": "host", "chunk": "host",
 }
 _CATEGORY_ORDER = ("compile", "execute", "stage", "io", "init", "host",
@@ -136,6 +137,7 @@ def report(run_dir_or_events) -> str:
             tracks.append(ev["track"])
     occupancy: dict = {}
     cost: dict = {}
+    comms: list = []
     for e in events:
         if e.get("kind") != "counter":
             continue
@@ -147,6 +149,8 @@ def report(run_dir_or_events) -> str:
             c = cost.setdefault(e["track"], {"flops": 0.0, "bytes": 0.0})
             c["flops"] += float(e["values"].get("flops", 0.0))
             c["bytes"] += float(e["values"].get("bytes_accessed", 0.0))
+        elif e["name"] == "comms_total":
+            comms.append((e["track"], e["values"]))
     lines.append(f"  {'track':>10} {'launches':>9} {'compiles':>9} "
                  f"{'execute_s':>10} {'compile_s':>10} {'lanes':>8} "
                  f"{'gflops':>8} {'GB':>7}")
@@ -170,6 +174,27 @@ def report(run_dir_or_events) -> str:
             f" {warm_us / 1e6:10.3f}"
             f" {sum(e['dur_us'] for e in cold) / 1e6:10.3f} {lanes:>8} "
             f"{gflops} {gb}")
+
+    # comms observatory section (telemetry/comms.py): one row per
+    # ``comms_total`` payload — per lane under a campaign — with the
+    # simulated wall-clock and the achieved uplink compression ratio
+    # (uplink bytes / dense-equivalent uplink bytes)
+    if comms:
+        lines.append(f"  {'comms':>10} {'lane':>6} {'up_MB':>9} "
+                     f"{'down_MB':>9} {'overlay_MB':>10} {'ratio':>7} "
+                     f"{'sim_s':>9}")
+        for track, v in comms:
+            dense = float(v.get("dense_up_bytes", 0.0))
+            ratio = (f"{float(v.get('up_bytes', 0.0)) / dense:7.3f}"
+                     if dense else f"{'-':>7}")
+            lane = v.get("lane")
+            lines.append(
+                f"  {track:>10} {('-' if lane is None else lane):>6} "
+                f"{float(v.get('up_bytes', 0.0)) / 1e6:9.2f} "
+                f"{float(v.get('down_bytes', 0.0)) / 1e6:9.2f} "
+                f"{float(v.get('overlay_bytes', 0.0)) / 1e6:10.2f} "
+                f"{ratio} "
+                f"{float(v.get('sim_time_s', 0.0)):9.3f}")
     return "\n".join(lines)
 
 

@@ -1,0 +1,449 @@
+"""Comms observatory tests (core/netmodel.py + telemetry/comms.py + drains).
+
+The load-bearing contract is that the comms plane is *pure host-side
+accounting*: running any driver (sync, async, campaign, planner bucket)
+with ``comms: {enabled: true}`` must produce bit-identical params and
+metrics to the same run with comms off, and byte totals must be invariant
+across chunk sizes (the accountants advance strictly in round order). On
+top of that: the traffic-matrix invariants (gossip symmetry +
+``gossip_steps`` scaling, hierarchical intra/cross split, int8 ≈ dense/4 +
+scale overhead, masked/rejected clients bill zero uplink), the LinkModel's
+prefix-stable Philox tag (schedules bitwise identical with link knobs on
+or off), the simulated wall-clock identity between the sync driver and an
+equal-speeds FedBuff(buffer == cohort) run, and the artifact plumbing
+(comms.csv, per-lane Perfetto counters, ``comms_total`` in the trace
+report, ``sim_time_s``/``cum_bytes`` joined onto result rows). Satellites:
+``get_topology`` did-you-mean, ``build_schedule`` degenerate-input
+validation, ``vtime`` threading into async logger/ledger rows.
+"""
+import os
+import types
+
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import netmodel
+from repro.core.jobs import load_job
+from repro.core.netmodel import (LaneComms, client_links, consensus_nbytes,
+                                 dense_nbytes, gossip_matrix,
+                                 hierarchical_nbytes, round_nbytes,
+                                 shape_template, topk_nbytes, uplink_nbytes)
+from repro.core.packing import QBLOCK
+from repro.core.probes import read_probes
+from repro.core.topology import get_topology
+from repro.runtime.campaign import CampaignExecutor
+from repro.runtime.clock import ClientSystemModel, build_schedule
+from repro.runtime.executor import Executor
+from repro.telemetry.comms import CommsSpec
+from repro.telemetry.trace import report
+
+_COMMS_ON = {"enabled": True}
+_EQUAL_SPEEDS = {"duration_sigma": 0.0, "rate_spread": 0.0,
+                 "straggler_prob": 0.0}
+
+
+def _raw(*, mode="sync", rounds=4, chunk=2, sweep=None, comms=None,
+         telemetry=None, runtime=None, consensus=None, seed=3,
+         strategy="fedavg", **tp_extra):
+    tp = {"n_clients": 4, "local_epochs": 1, "client_lr": 0.1,
+          "rounds": rounds, "seed": seed, "rounds_per_launch": chunk}
+    if mode == "async":
+        tp.update({"mode": "async", "async_buffer": 3, "max_staleness": 4,
+                   "staleness_exponent": 0.5})
+    tp.update(tp_extra)
+    raw = {
+        "name": "comms-test",
+        "model": {"arch": "flsim-logreg"},
+        "dataset": {"dataset": "synthetic_vision", "n_items": 128,
+                    "distribution": {"partition": "dirichlet",
+                                     "dirichlet_alpha": 0.5}},
+        "strategy": {"strategy": strategy, "train_params": tp},
+    }
+    for key, val in (("sweep", sweep), ("comms", comms),
+                     ("telemetry", telemetry), ("runtime", runtime),
+                     ("consensus", consensus)):
+        if val is not None:
+            raw[key] = val
+    return raw
+
+
+def _params(state):
+    return jax.tree.map(np.asarray, state["params"])
+
+
+def _assert_bitwise_equal(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _run(raw):
+    ex = Executor(load_job(raw)).scaffold()
+    state, logger = ex.run()
+    return ex, state, logger
+
+
+# block-aligned shapes so the int8 padding overhead is purely the scales
+_TPL = [netmodel._ShapeLeaf((256, 8)), netmodel._ShapeLeaf((256,))]
+
+
+# ---------------------------------------------------------------------------
+# payload sizes: int8 / topk / dense wire bytes
+# ---------------------------------------------------------------------------
+
+def test_int8_bytes_quarter_dense_plus_scales():
+    dense = dense_nbytes(_TPL)
+    int8 = uplink_nbytes(_TPL, FLConfig(compression="int8"))
+    n = sum(leaf.size for leaf in _TPL)
+    # 1 byte/value + 4 bytes per qblock scale: ~0.25x + per-block overhead
+    assert int8 == n + 4 * (n // QBLOCK)
+    assert 0.25 * dense < int8 <= 0.30 * dense
+
+
+def test_topk_bytes_are_index_value_pairs():
+    fl = FLConfig(compression="topk", topk_ratio=0.1)
+    n = sum(leaf.size for leaf in _TPL)
+    assert uplink_nbytes(_TPL, fl) == 8 * int(np.ceil(0.1 * n))
+    assert topk_nbytes(_TPL, 1e-9) == 8     # at least one coordinate
+
+
+def test_downlink_is_always_dense():
+    up, down = netmodel.payload_nbytes(_TPL, FLConfig(compression="int8"))
+    assert down == dense_nbytes(_TPL) and up < down
+
+
+# ---------------------------------------------------------------------------
+# traffic-matrix invariants (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("steps", [1, 3])
+def test_gossip_matrix_symmetric_and_scales_with_steps(steps):
+    m = gossip_matrix(6, 1000, steps)
+    np.testing.assert_array_equal(m, m.T)
+    assert np.diagonal(m).sum() == 0
+    # each client sends its state to both ring neighbours, per step
+    assert m.sum() == 6 * 2 * 1000 * steps
+    np.testing.assert_array_equal(m, steps * gossip_matrix(6, 1000, 1))
+
+
+def test_gossip_matrix_degenerate_sizes():
+    assert gossip_matrix(1, 1000).sum() == 0
+    # C=2: both ring neighbours of client 0 are client 1 -> doubled cell
+    m = gossip_matrix(2, 10)
+    assert m[0, 1] == m[1, 0] == 20
+
+
+def test_hierarchical_two_tier_split():
+    intra, cross = hierarchical_nbytes(400, 1600, 1000, pods=4)
+    assert intra == 2000                    # client <-> edge exchange
+    assert cross == 2 * 4 * 1000            # pod aggregate up + global down
+    sb = dense_nbytes(_TPL)
+    total = round_nbytes(_TPL, FLConfig(topology="hierarchical",
+                                        n_clients=4), pods=4)
+    assert total == 4 * 2 * sb + 2 * 4 * sb
+
+
+def test_consensus_overlay_bytes():
+    sb = dense_nbytes(_TPL)
+    assert consensus_nbytes(FLConfig(n_workers=1), sb) == 0
+    three = consensus_nbytes(FLConfig(n_workers=3), sb)
+    assert three == 3 * 2 * sb + 3 * 2 * 16     # shares + digest votes
+
+
+def test_masked_clients_bill_zero_uplink():
+    fl = FLConfig(n_clients=8, cohort=3)
+    lane = LaneComms(fl=fl, csm=ClientSystemModel(seed=0), template=_TPL)
+    cols = lane.sync_rounds(0, 4)
+    up, down = netmodel.payload_nbytes(_TPL, fl)
+    assert (cols["up_bytes"] == 3 * up).all()
+    assert (cols["down_bytes"] == 3 * down).all()
+
+
+def test_rejected_async_arrivals_bill_zero_uplink():
+    fl = FLConfig(n_clients=4)
+
+    def sched(accept):
+        return types.SimpleNamespace(
+            client=np.array([0, 1, 2, 3, 0, 1, 2, 3]),
+            task=np.zeros(8, np.int32),
+            accept=np.asarray(accept, bool),
+            vtime=np.linspace(1.0, 8.0, 8))
+
+    lane = LaneComms(fl=fl, csm=ClientSystemModel(seed=0), template=_TPL)
+    cols = lane.async_rounds(0, 2, sched([True, False, True, False] * 2),
+                             events_per_round=4)
+    assert (cols["up_bytes"] == 2 * lane.up_payload).all()
+    assert (cols["down_bytes"] == 4 * lane.down_payload).all()
+    lane2 = LaneComms(fl=fl, csm=ClientSystemModel(seed=0), template=_TPL)
+    cols2 = lane2.async_rounds(0, 2, sched([False] * 8),
+                               events_per_round=4)
+    assert (cols2["up_bytes"] == 0).all()
+    assert (cols2["down_bytes"] > 0).all()
+
+
+def test_decentralized_rounds_symmetric_and_scale_with_steps():
+    def total_up(steps):
+        fl = FLConfig(n_clients=4, topology="decentralized",
+                      gossip_steps=steps)
+        lane = LaneComms(fl=fl, csm=ClientSystemModel(seed=0),
+                         template=_TPL)
+        cols = lane.sync_rounds(0, 2)
+        assert (cols["up_bytes"] == cols["down_bytes"]).all()
+        return cols["up_bytes"].sum()
+    assert total_up(3) == 3 * total_up(1)
+
+
+def test_blockchain_block_billed_per_round():
+    fl = FLConfig(n_clients=4, blockchain="hashchain")
+    lane = LaneComms(fl=fl, csm=ClientSystemModel(seed=0), template=_TPL)
+    cols = lane.sync_rounds(0, 3)
+    assert (cols["overlay_bytes"] == netmodel.BLOCK_NBYTES).all()
+
+
+# ---------------------------------------------------------------------------
+# LinkModel: seed-pure draws on a dedicated tag, schedules prefix-stable
+# ---------------------------------------------------------------------------
+
+def test_client_links_deterministic_and_tiered():
+    csm = ClientSystemModel(seed=7, link_tiers=4)
+    a, b = client_links(csm, 16), client_links(csm, 16)
+    np.testing.assert_array_equal(a.up_Bps, b.up_Bps)
+    assert len(np.unique(a.up_Bps)) > 1       # tiers actually differ
+    # prefix-stable: the first 8 clients keep their links at C=16
+    np.testing.assert_array_equal(client_links(csm, 8).up_Bps,
+                                  a.up_Bps[:8])
+    homo = client_links(ClientSystemModel(seed=7), 16)
+    assert len(np.unique(homo.up_Bps)) == 1
+
+
+def test_schedule_bitwise_invariant_to_link_knobs():
+    w = np.ones(4, np.float32)
+    plain = build_schedule(ClientSystemModel(seed=3), 4, 16, w)
+    linked = build_schedule(
+        ClientSystemModel(seed=3, link_tiers=4, up_mbps=10.0,
+                          latency_s=0.2), 4, 16, w)
+    for f in ("client", "task", "accept", "vtime", "staleness"):
+        np.testing.assert_array_equal(np.asarray(getattr(plain, f)),
+                                      np.asarray(getattr(linked, f)))
+
+
+# ---------------------------------------------------------------------------
+# bitwise invariance + chunking invariance through the drivers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_bitwise_comms_on_vs_off(mode):
+    ex_on, s_on, log_on = _run(_raw(mode=mode, comms=_COMMS_ON))
+    _, s_off, log_off = _run(_raw(mode=mode))
+    _assert_bitwise_equal(_params(s_off), _params(s_on))
+    assert log_on.series("loss") == log_off.series("loss")
+    assert len(ex_on.comms_rows) == 4
+
+
+def test_campaign_bitwise_comms_on_vs_off():
+    sweep = {"seeds": [3, 5]}
+    c_off = CampaignExecutor(load_job(_raw(sweep=sweep))).scaffold()
+    c_off.run()
+    c_on = CampaignExecutor(load_job(
+        _raw(sweep=sweep, comms=_COMMS_ON))).scaffold()
+    c_on.run()
+    for s in range(2):
+        _assert_bitwise_equal(c_off.trajectory_params(s),
+                              c_on.trajectory_params(s))
+    # one row per (lane, round), keyed by sweep coords like campaign.csv
+    assert len(c_on.comms_rows) == 2 * 4
+    assert {r["seed"] for r in c_on.comms_rows} == {3, 5}
+    # the result rows carry the curve x-axes
+    assert all("sim_time_s" in r and "cum_bytes" in r for r in c_on.results)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_comms_rows_chunking_invariant(mode):
+    ex1, _, _ = _run(_raw(mode=mode, chunk=1, comms=_COMMS_ON))
+    ex4, _, _ = _run(_raw(mode=mode, chunk=4, comms=_COMMS_ON))
+    assert ex1.comms_rows == ex4.comms_rows
+
+
+def test_ledger_digests_invariant_to_comms():
+    kw = dict(consensus={"blockchain": "hashchain"})
+    ex_on, _, _ = _run(_raw(comms=_COMMS_ON, **kw))
+    ex_off, _, _ = _run(_raw(**kw))
+    chain = [b.payload for b in ex_on.job.ledger.blocks()
+             if b.kind == "global"]
+    chain_off = [b.payload for b in ex_off.job.ledger.blocks()
+                 if b.kind == "global"]
+    assert chain and chain == chain_off
+
+
+# ---------------------------------------------------------------------------
+# simulated wall-clock: deterministic, sync == equal-speeds FedBuff
+# ---------------------------------------------------------------------------
+
+def test_sim_clock_seed_pure():
+    ex1, _, _ = _run(_raw(comms=_COMMS_ON))
+    ex2, _, _ = _run(_raw(comms=_COMMS_ON))
+    assert ex1.comms_rows == ex2.comms_rows
+    assert (np.diff([r["sim_time_s"] for r in ex1.comms_rows]) > 0).all()
+
+
+def test_sync_matches_equal_speeds_fedbuff():
+    """On the FedAvg-identity configuration (equal speeds, FedBuff buffer
+    == cohort) the sync makespan composition and the vtime-shifted async
+    composition must agree — the same collapse the schedule itself
+    guarantees for params."""
+    ex_s, _, _ = _run(_raw(comms=_COMMS_ON, runtime=_EQUAL_SPEEDS))
+    ex_a, _, _ = _run(_raw(mode="async", comms=_COMMS_ON,
+                           runtime=_EQUAL_SPEEDS, async_buffer=4,
+                           max_staleness=4, staleness_exponent=0.0))
+    t_sync = [r["sim_time_s"] for r in ex_s.comms_rows]
+    t_async = [r["sim_time_s"] for r in ex_a.comms_rows]
+    np.testing.assert_allclose(t_sync, t_async, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# artifact plumbing: comms.csv, counter tracks, trace report
+# ---------------------------------------------------------------------------
+
+def test_comms_csv_and_counter_tracks(tmp_path):
+    ex, _, _ = _run(_raw(comms=_COMMS_ON,
+                         telemetry={"out_dir": str(tmp_path)}))
+    ex.recorder.close()
+    rows = read_probes(tmp_path / "comms.csv")
+    assert len(rows) == 4
+    assert rows == ex.comms_rows        # csv round-trips the full buffer
+    counters = {e["name"] for e in ex.recorder.events
+                if e.get("kind") == "counter"}
+    assert {"comms:cum_up_bytes", "comms:cum_down_bytes",
+            "comms:sim_time_s", "comms_total"} <= counters
+    spans = {e["name"] for e in ex.recorder.events if e["kind"] == "span"}
+    assert "comms_flush" in spans
+    # counter samples are back-dated inside their launch span
+    launch = next(e for e in ex.recorder.events
+                  if e.get("name") == "launch")
+    sample = next(e for e in ex.recorder.events
+                  if e.get("name") == "comms:cum_up_bytes")
+    assert launch["t0_us"] <= sample["t_us"] \
+        <= launch["t0_us"] + launch["dur_us"]
+    # the trace report renders the comms section off comms_total
+    text = report([dict(e) for e in ex.recorder.events])
+    assert "up_MB" in text and "sim_s" in text
+
+
+def test_campaign_per_lane_comms_counters_and_csv(tmp_path):
+    c = CampaignExecutor(load_job(_raw(
+        sweep={"seeds": [3, 5]},
+        telemetry={"out_dir": str(tmp_path)},
+        comms={"enabled": True, "out_dir": str(tmp_path)}))).scaffold()
+    c.run()
+    sample = next(e for e in c.recorder.events
+                  if e.get("name") == "comms:cum_up_bytes")
+    assert set(sample["values"]) == {"lane0", "lane1"}
+    totals = [e for e in c.recorder.events
+              if e.get("name") == "comms_total"]
+    assert {v["values"]["lane"] for v in totals} == {0, 1}
+    rows = read_probes(tmp_path / "comms.csv")
+    assert len(rows) == 8
+    assert {(r["seed"], r["traj"]) for r in rows} == {(3, 0), (5, 1)}
+
+
+def test_comms_memory_only_without_out_dir():
+    ex, _, _ = _run(_raw(comms=_COMMS_ON))
+    assert ex._comms_path() is None and len(ex.comms_rows) == 4
+
+
+def test_plan_int8_lane_uplink_ratio(tmp_path):
+    """The acceptance campaign: a ``compression: [none, int8]`` sweep
+    reports int8 lane uplink <= 0.30x dense in the merged comms.csv."""
+    from repro.runtime.scheduler import PlanExecutor
+    px = PlanExecutor(load_job(_raw(
+        sweep={"compression": ["none", "int8"]}, comms=_COMMS_ON)),
+        out_dir=str(tmp_path)).scaffold()
+    px.run()
+    rows = read_probes(tmp_path / "comms.csv")
+    last = {r["compression"]: r for r in rows if r["round"] == 3}
+    ratio = last["int8"]["cum_up_bytes"] / last["none"]["cum_up_bytes"]
+    assert ratio <= 0.30
+    assert last["int8"]["cum_down_bytes"] == last["none"]["cum_down_bytes"]
+    # both lanes' params bitwise-match their comms-off plan
+    px_off = PlanExecutor(load_job(_raw(
+        sweep={"compression": ["none", "int8"]}))).scaffold()
+    px_off.run()
+    for lane in range(2):
+        _assert_bitwise_equal(px.lane_params(lane), px_off.lane_params(lane))
+
+
+# ---------------------------------------------------------------------------
+# figures: time-/bytes-to-accuracy reuse the banded grouping
+# ---------------------------------------------------------------------------
+
+def test_time_and_bytes_to_accuracy_curves():
+    from benchmarks.figures import bytes_to_accuracy, time_to_accuracy
+    c = CampaignExecutor(load_job(_raw(
+        sweep={"seeds": [3, 5]}, comms=_COMMS_ON))).scaffold()
+    c.run()
+    curves = time_to_accuracy(c.results, metric="loss")
+    assert len(curves) == 1               # seeds pool into one band
+    assert curves[0]["x"] == sorted(curves[0]["x"])
+    bcurves = bytes_to_accuracy(c.results, metric="loss")
+    assert bcurves[0]["x"][-1] > bcurves[0]["x"][0] > 0
+
+
+# ---------------------------------------------------------------------------
+# satellites: topology did-you-mean, schedule validation, vtime threading
+# ---------------------------------------------------------------------------
+
+def test_get_topology_did_you_mean():
+    with pytest.raises(ValueError, match="client_server"):
+        get_topology("client-server")
+    with pytest.raises(ValueError, match="known"):
+        get_topology("zzz")
+
+
+def test_build_schedule_rejects_degenerate_inputs():
+    with pytest.raises(ValueError, match="n_events"):
+        build_schedule(ClientSystemModel(seed=0), 4, 0,
+                       np.ones(4, np.float32))
+    with pytest.raises(ValueError, match="n_clients"):
+        build_schedule(ClientSystemModel(seed=0), 0, 8,
+                       np.ones(0, np.float32))
+
+
+def test_async_rows_carry_vtime_without_comms():
+    _, _, logger = _run(_raw(mode="async"))
+    vt = [r["vtime"] for r in logger.rows]
+    assert len(vt) == 4 and vt == sorted(vt) and vt[0] > 0
+
+
+def test_async_digest_blocks_carry_vtime():
+    ex, _, _ = _run(_raw(mode="async", digest_every_events=4,
+                         consensus={"blockchain": "hashchain"}))
+    digests = [b for b in ex.job.ledger.blocks()
+               if b.kind == "async_digest"]
+    assert digests
+    assert all(b.payload["vtime"] > 0 for b in digests)
+
+
+def test_comms_spec_validation():
+    with pytest.raises(ValueError, match="pods"):
+        CommsSpec(enabled=True, pods=0)
+    with pytest.raises(KeyError, match="enabled"):
+        load_job(_raw(comms={"enabld": True}))
+    assert not CommsSpec.from_job(load_job(_raw())).enabled
+    assert CommsSpec.from_job(
+        load_job(_raw(comms={"enabled": True, "pods": 2}))).pods == 2
+
+
+def test_campaign_template_strips_lane_dim():
+    c = CampaignExecutor(load_job(_raw(
+        sweep={"seeds": [3, 5]}, comms=_COMMS_ON))).scaffold()
+    single = Executor(load_job(_raw(comms=_COMMS_ON))).scaffold()
+    assert c._comms[0].state_nbytes == single._comms[0].state_nbytes
+
+
+def test_shape_template_strips_leading():
+    t = {"w": np.zeros((3, 4, 5))}
+    assert dense_nbytes(shape_template(t)) == 4 * 60
+    assert dense_nbytes(shape_template(t, strip_leading=True)) == 4 * 20

@@ -105,5 +105,7 @@ def test_get_topology_registry():
     assert isinstance(get_topology("client_server"), ClientServer)
     assert isinstance(get_topology("hierarchical"), Hierarchical)
     assert get_topology("decentralized", 3).gossip_steps == 3
-    with pytest.raises(KeyError):
+    with pytest.raises(ValueError, match="unknown topology"):
         get_topology("full-mesh-9000")
+    with pytest.raises(ValueError, match="did you mean 'hierarchical'"):
+        get_topology("hierarchal")
