@@ -876,6 +876,135 @@ def bench_comms(arch: str = "flsim-logreg", n_traj: int = 8,
     return results
 
 
+def bench_stream(arch: str = "flsim-logreg", n_clients: int = 256,
+                 cohort: int = 16, max_cohort: int = 20, rounds: int = 16,
+                 chunk: int = 4, reps: int = 3, n_items: int = 2048,
+                 local_epochs: int = 2, seed: int = 0,
+                 population: int = 100_000, pop_rounds: int = 4,
+                 out_path: str = "BENCH_stream.json"):
+    """The streaming client plane: (a) double-buffered per-chunk staging
+    vs the resident device gather on a config that fits in memory — same
+    compiled program, same bytes, so the runs are bitwise identical and
+    the only question is throughput (gated >= 0.9x in
+    benchmarks/report.py: the prefetch thread must hide the host
+    assembly); (b) a synthetic population too large to stage resident
+    (``population`` clients) training through the sync driver, reporting
+    the peak staged working set against the resident-equivalent bytes off
+    the ``staged_bytes`` telemetry counters. Writes ``out_path``."""
+    import json
+    import tempfile
+
+    from repro.core.jobs import load_job
+    from repro.runtime.executor import Executor
+    from repro.telemetry.recorder import read_events
+
+    assert rounds % chunk == 0, \
+        "rounds must be a multiple of chunk (keeps the timed region free " \
+        "of remainder-length compiles)"
+
+    def raw(streaming):
+        return {
+            "name": "bench-stream",
+            "model": {"arch": arch},
+            "dataset": {"dataset": "synthetic_vision", "n_items": n_items,
+                        "distribution": {"partition": "dirichlet",
+                                         "dirichlet_alpha": 0.5}},
+            "strategy": {"strategy": "fedavg",
+                         "train_params": {"n_clients": n_clients,
+                                          "cohort": cohort,
+                                          "max_cohort": max_cohort,
+                                          "streaming": streaming,
+                                          "local_epochs": local_epochs,
+                                          "client_lr": 0.1,
+                                          "rounds": chunk + reps * rounds,
+                                          "seed": seed,
+                                          "rounds_per_launch": chunk}},
+            "runtime": {"straggler_prob": 0.1,
+                        "straggler_overprovision": 1.25},
+        }
+
+    results = {"config": {"arch": arch, "n_clients": n_clients,
+                          "cohort": cohort, "max_cohort": max_cohort,
+                          "rounds": rounds, "chunk": chunk, "reps": reps,
+                          "n_items": n_items, "population": population,
+                          "backend": jax.default_backend()},
+               "runs": {}}
+
+    res = Executor(load_job(raw(False))).scaffold()
+    stm = Executor(load_job(raw(True))).scaffold()
+    res.run(rounds=chunk)                    # warm-up: compile + stage
+    stm.run(rounds=chunk)
+    dt_res = dt_stm = float("inf")
+    for rep in range(reps):
+        upto = chunk + (rep + 1) * rounds
+        t0 = time.time()
+        res.run(rounds=upto)
+        dt_res = min(dt_res, time.time() - t0)
+        t0 = time.time()
+        stm.run(rounds=upto)
+        dt_stm = min(dt_stm, time.time() - t0)
+    for a, b in zip(jax.tree.leaves(res.state["params"]),
+                    jax.tree.leaves(stm.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name, dt in (("resident", dt_res), ("streaming", dt_stm)):
+        results["runs"][name] = {
+            "rounds": rounds, "wall_s": dt, "rounds_per_s": rounds / dt,
+            "s_per_round": dt / rounds}
+    speedup = dt_res / dt_stm
+    results["speedup_streaming_vs_resident"] = speedup
+    for name in ("resident", "streaming"):
+        r = results["runs"][name]
+        print(f"stream_{name},{r['s_per_round']*1e6:.0f},"
+              f"rounds_per_s={r['rounds_per_s']:.2f};"
+              f"speedup={speedup if name == 'streaming' else 1.0:.2f}")
+
+    # (b) the population that cannot be staged resident
+    tdir = tempfile.mkdtemp(prefix="bench-stream-")
+    pop_job = load_job({
+        "name": "bench-stream-pop",
+        "model": {"arch": arch},
+        "dataset": {"dataset": "synthetic_population",
+                    "n_items": population, "items_per_client": 8},
+        "strategy": {"strategy": "fedavg",
+                     "train_params": {"n_clients": population,
+                                      "cohort": cohort,
+                                      "max_cohort": max_cohort,
+                                      "streaming": True,
+                                      "client_lr": 0.1,
+                                      "rounds": chunk + pop_rounds,
+                                      "seed": seed,
+                                      "rounds_per_launch": chunk}},
+        "runtime": {"straggler_prob": 0.1,
+                    "straggler_overprovision": 1.25},
+        "telemetry": {"enabled": True, "out_dir": tdir},
+    })
+    ex = Executor(pop_job).scaffold()
+    ex.run(rounds=chunk)                     # warm-up chunk
+    t0 = time.time()
+    ex.run(rounds=chunk + pop_rounds)
+    dt_pop = time.time() - t0
+    ex.recorder.close()
+    slabs = [e["values"] for e in read_events(tdir)
+             if e.get("kind") == "counter"
+             and e.get("name") == "staged_bytes"
+             and "slab" in e.get("values", {})]
+    peak = max(v["peak_slab"] for v in slabs)
+    resident_equiv = max(v["resident_equiv"] for v in slabs)
+    results["population_run"] = {
+        "n_clients": population, "rounds": pop_rounds, "wall_s": dt_pop,
+        "rounds_per_s": pop_rounds / dt_pop,
+        "peak_slab_bytes": peak, "resident_equiv_bytes": resident_equiv,
+        "working_set_ratio": peak / resident_equiv}
+    print(f"stream_population,{dt_pop/pop_rounds*1e6:.0f},"
+          f"clients={population};peak_slab_MiB={peak/2**20:.1f};"
+          f"resident_equiv_MiB={resident_equiv/2**20:.1f};"
+          f"working_set_ratio={peak/resident_equiv:.6f}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run_fl(fl: FLConfig, arch: str = "flsim-cnn", n_items: int = 768,
            rounds: int = 8, batch: int = 16, steps: int = 1,
            eval_n: int = 256, arch_cfg=None, run_name: str = "run"):

@@ -44,6 +44,12 @@ BENCH_CONTRACTS = {
     "BENCH_comms": (0.95,
                     "campaign with comms accounting + recorder vs both off",
                     lambda r: r["speedup_on_vs_off"]),
+    # 0.9x = double-buffered streaming staging may cost at most 10% vs the
+    # resident device gather (same compiled program, same bytes — the
+    # prefetch thread must hide the host assembly)
+    "BENCH_stream": (0.9,
+                     "streaming slab staging vs resident device gather",
+                     lambda r: r["speedup_streaming_vs_resident"]),
 }
 
 

@@ -100,6 +100,13 @@ def main() -> None:
         # trace + comms.csv CI uploads
         "comms": lambda: flbench.bench_comms(
             rounds=8 if q else 16, reps=3 if q else 4),
+        # streaming vs resident slab staging throughput (the double
+        # buffer must hide the host assembly), plus the 10^5-client
+        # population working-set demo; --quick keeps the cohort geometry
+        # (the overlap is the claim) and cuts rounds + the population
+        "stream": lambda: flbench.bench_stream(
+            rounds=8 if q else 16, reps=2 if q else 3,
+            population=20_000 if q else 100_000),
         "fig8": lambda: figures.fig8_frameworks(rounds=4 if q else 8),
         "fig9": lambda: figures.fig9_agnosticism(rounds=4 if q else 8),
         "fig10": lambda: figures.fig10_multiworker(rounds=3 if q else 6),

@@ -178,6 +178,20 @@ class FLConfig:
     async_concurrency: int = 0        # clients in flight (0 -> all)
     n_clients: int = 16               # virtual clients (cohort per round)
     cohort: int = 0                   # 0 -> all clients each round
+    # Ragged client plane: > 0 pads the per-round cohort to this many slots
+    # and zero-weights the tail, so the compiled program sees ``max_cohort``
+    # slots instead of ``n_clients`` clients — ``n_clients``/``cohort`` drop
+    # out of the program signature (core/plan.py) and become sweepable
+    # host-side slab-plan values (core/sweeps.py). Must be >= the per-round
+    # cohort (``cohort`` or, with cohort=0, ``n_clients``). 0 keeps the
+    # dense all-clients-resident path.
+    max_cohort: int = 0
+    # Streaming data plane (ragged mode only): stage only the sampled
+    # cohorts' shards per chunk from host memory, double-buffered so the
+    # host->device copy of chunk k+1 overlaps chunk k's compiled scan.
+    # Breaks the "all clients resident in HBM" ceiling; bitwise identical
+    # to resident slab staging (data/pipeline.py stagers).
+    streaming: bool = False
     local_epochs: int = 1
     local_steps: int = 1              # local optimizer steps per epoch
     batch_size: int = 32              # per-client local batch (device gather)

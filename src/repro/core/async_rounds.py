@@ -45,7 +45,7 @@ from repro.core.rounds import bind_hyper, freeze_unless, local_train, \
     pop_alive
 from repro.core.strategy import Strategy, tree_add, tree_scale, tree_sub, \
     tree_zeros_like
-from repro.data.pipeline import gather_one_client_batch
+from repro.data.pipeline import gather_event_batch, gather_one_client_batch
 from repro.sharding.axes import AxisCtx
 
 
@@ -84,7 +84,7 @@ def async_init_state(state: dict, ring: int, fl: FLConfig = None,
 
 def build_async_multi(model, strategy: Strategy, fl: FLConfig,
                       batch_size=None, probes: bool = False,
-                      on_divergence: str = "report"):
+                      on_divergence: str = "report", ragged: bool = False):
     """Fuse ``n_events`` server events into one compiled program.
 
     Returns ``multi_fn(ctx, state, staged, sched, root, start_event,
@@ -93,6 +93,14 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
     its own event window in-program, so the host only supplies the start
     offset. ``n_events`` must be a Python int (the scan length). Metrics
     come back stacked with a leading ``n_events`` dim.
+
+    With ``ragged`` (the streaming client plane, ``fl.max_cohort > 0``)
+    ``staged`` is not the resident root but the launch's *event slab* —
+    per-event rows {"x": (E, Lmax, ...), "y", "len"} staged by a
+    ``data.pipeline.SlabStager`` for exactly the clients the schedule says
+    arrive in this window. The batch draw stays keyed by the real client id
+    from the schedule, so resident and streaming staging are bitwise the
+    same program on the same bytes.
 
     ``state`` needs the async carries from ``async_init_state``.
 
@@ -116,15 +124,19 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
         fl_h, strategy_h = bind_hyper(fl, strategy, hyper)
         xs = {k: jax.lax.dynamic_slice_in_dim(v, start_event, n_events)
               for k, v in sched.items()}
+        scan_xs = (xs, staged) if ragged else xs
 
-        def body(st, ev):
+        def body(st, scan_x):
+            ev, row = scan_x if ragged else (scan_x, None)
             params, server = st["params"], st["server"]
             hist, acc = st["hist"], st["acc"]
             c = ev["client"]
             rkey = determinism.round_key(root, ev["task"])
             stale = jax.tree.map(lambda h: h[ev["read_slot"]], hist)
-            cbatch = gather_one_client_batch(staged, rkey, c, batch_size,
-                                             steps)
+            cbatch = (gather_event_batch(row, rkey, c, batch_size, steps)
+                      if ragged else
+                      gather_one_client_batch(staged, rkey, c, batch_size,
+                                              steps))
             key = determinism.client_key(rkey, c)
             delta, _, loss = local_train(model, ctx, strategy_h, fl_h, stale,
                                          server, (), cbatch, key,
@@ -241,6 +253,6 @@ def build_async_multi(model, strategy: Strategy, fl: FLConfig,
                 metrics["probes"] = probelib.stack_probes(pr)
             return new_st, metrics
 
-        return jax.lax.scan(body, state, xs)
+        return jax.lax.scan(body, state, scan_xs)
 
     return multi_fn

@@ -34,6 +34,8 @@ def param_digest(tree) -> str:
 
 @dataclasses.dataclass
 class Block:
+    """One ledger entry; ``hash`` chains over ``prev_hash`` via SHA256."""
+
     index: int
     round: int
     kind: str                  # "aggregate" | "consensus" | "global"
@@ -43,6 +45,7 @@ class Block:
     hash: str = ""
 
     def compute_hash(self) -> str:
+        """SHA256 over the canonical JSON body (excludes ``hash`` itself)."""
         body = json.dumps(
             {"i": self.index, "r": self.round, "k": self.kind,
              "p": self.payload, "prev": self.prev_hash, "t": self.timestamp},
@@ -51,9 +54,19 @@ class Block:
 
 
 class LedgerBackend(Protocol):
-    def append(self, round: int, kind: str, payload: dict) -> str: ...
-    def verify(self) -> bool: ...
-    def blocks(self) -> list: ...
+    """Pluggable chain interface (swap in a real chain here)."""
+
+    def append(self, round: int, kind: str, payload: dict) -> str:
+        """Append a block and return its hash."""
+        ...
+
+    def verify(self) -> bool:
+        """Check the whole chain's hash links."""
+        ...
+
+    def blocks(self) -> list:
+        """Return all blocks, genesis first."""
+        ...
 
 
 class HashChainLedger:
@@ -67,6 +80,7 @@ class HashChainLedger:
         self.reputation: dict[str, float] = {}
 
     def append(self, round: int, kind: str, payload: dict) -> str:
+        """Append a ``(round, kind, payload)`` block; returns its hash."""
         self._clock += 1.0          # logical clock: deterministic chains
         b = Block(len(self._chain), round, kind, payload,
                   self._chain[-1].hash, self._clock)
@@ -75,21 +89,25 @@ class HashChainLedger:
         return b.hash
 
     def verify(self) -> bool:
+        """Re-hash every block and check the prev-hash links."""
         for prev, cur in zip(self._chain, self._chain[1:]):
             if cur.prev_hash != prev.hash or cur.hash != cur.compute_hash():
                 return False
         return True
 
     def blocks(self) -> list:
+        """Return a copy of the chain, genesis first."""
         return list(self._chain)
 
     # -- FL-specific conveniences ---------------------------------------
     def record_aggregate(self, round: int, worker: str, params) -> str:
+        """Record a worker's aggregate-parameter digest for ``round``."""
         return self.append(round, "aggregate",
                            {"worker": worker, "digest": param_digest(params)})
 
     def record_consensus(self, round: int, contract: str, chosen_digest: str,
                          worker_digests: dict) -> str:
+        """Record a consensus outcome and update worker reputations."""
         # reputation: workers whose digest lost the vote get penalized
         for w, d in worker_digests.items():
             rep = self.reputation.get(w, 1.0)
@@ -99,15 +117,18 @@ class HashChainLedger:
                             "workers": worker_digests})
 
     def record_global(self, round: int, params) -> str:
+        """Record the digest of the round's accepted global model."""
         return self.append(round, "global",
                            {"digest": param_digest(params)})
 
     def provenance(self, digest_: str) -> list:
+        """Return every block whose payload mentions ``digest_``."""
         return [b for b in self._chain
                 if digest_ in json.dumps(b.payload)]
 
 
 def get_ledger(kind: str) -> Optional[HashChainLedger]:
+    """Resolve a ledger backend by name (``none`` | ``hashchain``)."""
     if kind in ("none", None):
         return None
     if kind == "hashchain":

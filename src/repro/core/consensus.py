@@ -67,6 +67,7 @@ def median_select(aggs, extra):
 
 
 def trimmed_mean(aggs, extra):
+    """Coordinate-wise trimmed mean over worker parameter trees."""
     trim = int(extra.get("trim", 1))
     def f(t):
         s = jnp.sort(t, axis=0)

@@ -11,18 +11,22 @@ import jax
 
 
 def root_key(seed: int) -> jax.Array:
+    """Root PRNG key for a run, derived from the job seed alone."""
     return jax.random.PRNGKey(seed)
 
 
 def round_key(key, round_idx) -> jax.Array:
+    """Per-round key: the root key folded with the absolute round index."""
     return jax.random.fold_in(key, round_idx)
 
 
 def client_key(key, client_id) -> jax.Array:
+    """Per-client key derived from a round key (tag 0x11C)."""
     return jax.random.fold_in(jax.random.fold_in(key, 0x11C), client_id)
 
 
 def step_key(key, step) -> jax.Array:
+    """Per-local-step key derived from a client key (tag 0x57E)."""
     return jax.random.fold_in(jax.random.fold_in(key, 0x57E), step)
 
 

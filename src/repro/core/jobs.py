@@ -25,7 +25,8 @@ from repro.core import sweeps
 from repro.core.strategies import get_strategy
 from repro.core.topology import get_topology
 from repro.core.blockchain import get_ledger
-from repro.data.pipeline import SyntheticLM, SyntheticVision
+from repro.data.pipeline import (SyntheticLM, SyntheticPopulation,
+                                 SyntheticVision)
 from repro.models import model_zoo
 from repro.runtime.clock import ClientSystemModel
 from repro.runtime.faults import FaultModel
@@ -33,6 +34,7 @@ from repro.runtime.faults import FaultModel
 
 @dataclasses.dataclass
 class Job:
+    """A validated FL job: raw config dict plus resolved typed sections."""
     name: str
     fl: FLConfig
     arch: str
@@ -48,7 +50,7 @@ class Job:
 
 _FL_KEYS = {f.name for f in dataclasses.fields(FLConfig)}
 _CSM_KEYS = {f.name for f in dataclasses.fields(ClientSystemModel)}
-_DATASET_KEYS = {"dataset", "n_items", "distribution"}
+_DATASET_KEYS = {"dataset", "n_items", "distribution", "items_per_client"}
 _MODEL_KEYS = {"arch", "reduced"}
 _STRATEGY_KEYS = {"strategy", "train_params", "aggregator_params"}
 # paper Fig. 2's six sections (clusters / node sections are accepted but
@@ -98,7 +100,48 @@ def make_dataset(raw: dict, fl: FLConfig, cfg=None):
         vocab = (cfg.padded_vocab if cfg is not None
                  and cfg.family != "small" else 512)
         return SyntheticLM(vocab=vocab, seed=fl.seed)
+    if kind == "synthetic_population":
+        # shard-on-demand population for the streaming client plane: sized
+        # by fl.n_clients, never materialized — requires streaming: true
+        kw = {}
+        if cfg is not None and cfg.family == "small":
+            from repro.models.small import input_shape
+            kw["shape"] = input_shape(cfg)
+        return SyntheticPopulation(
+            n_clients=fl.n_clients,
+            items_per_client=ds.get("items_per_client", 8),
+            seed=fl.seed, **kw)
     raise KeyError(f"unknown dataset {kind!r}")
+
+
+def validate_cohort(fl: FLConfig) -> None:
+    """Reject cohort/ragged combinations that would silently misbehave.
+
+    Without this, ``cohort > n_clients`` silently clamps through the mask's
+    permutation pool, an undersized ``max_cohort`` would drop sampled
+    clients on the floor, and ``streaming`` without ragged slots has no
+    per-chunk working set to stream. Campaigns validate every expanded
+    lane config through the same function.
+    """
+    if fl.cohort < 0 or fl.max_cohort < 0:
+        raise ValueError(f"cohort={fl.cohort} / max_cohort={fl.max_cohort} "
+                         "must be >= 0")
+    if fl.cohort > fl.n_clients:
+        raise ValueError(
+            f"cohort={fl.cohort} exceeds n_clients={fl.n_clients}; an "
+            "oversized cohort would silently clamp to the population — "
+            "lower cohort or raise n_clients")
+    target = fl.cohort or fl.n_clients
+    if fl.max_cohort and fl.max_cohort < target:
+        raise ValueError(
+            f"max_cohort={fl.max_cohort} is smaller than the per-round "
+            f"cohort ({target}); every sampled client needs a slab slot — "
+            "raise max_cohort or lower cohort (cohort=0 samples all "
+            "n_clients)")
+    if fl.streaming and not fl.max_cohort:
+        raise ValueError(
+            "streaming: true requires ragged cohorts (max_cohort > 0) — "
+            "resident staging has no per-chunk working set to stream")
 
 
 def make_fault(raw: dict, fl: FLConfig) -> ClientSystemModel:
@@ -140,6 +183,7 @@ def rebind(job: Job, fl: FLConfig) -> Job:
 
 
 def load_job(path_or_dict) -> Job:
+    """Load and validate a job from a YAML path or config dict."""
     if isinstance(path_or_dict, (str, pathlib.Path)):
         raw = yaml.safe_load(pathlib.Path(path_or_dict).read_text())
     else:
@@ -190,6 +234,7 @@ def load_job(path_or_dict) -> Job:
     if "strategy" in strat:
         flkw["strategy"] = strat["strategy"]
     fl = FLConfig(**flkw)
+    validate_cohort(fl)
 
     arch = raw.get("model", {}).get("arch", "flsim-cnn")
     reduced = raw.get("model", {}).get("reduced", False)

@@ -192,9 +192,11 @@ class LinkPlan:
     latency_s: float
 
     def up_time(self, nbytes) -> np.ndarray:
+        """Per-client uplink transfer seconds for an ``nbytes`` payload."""
         return self.latency_s + np.asarray(nbytes, np.float64) / self.up_Bps
 
     def down_time(self, nbytes) -> np.ndarray:
+        """Per-client downlink transfer seconds for an ``nbytes`` payload."""
         return self.latency_s + np.asarray(nbytes, np.float64) \
             / self.down_Bps
 

@@ -68,11 +68,6 @@ def program_signature(fl: FLConfig, arch: str = "") -> Tuple:
         "arch": arch,
         "mode": mode,
         "strategy": fl.strategy,
-        "n_clients": fl.n_clients,
-        "cohort": target,
-        # the over-provisioned pool size is a Python int inside cohort_mask
-        "cohort_pool": int(min(math.ceil(target * fl.straggler_overprovision),
-                               fl.n_clients)),
         "local_epochs": fl.local_epochs,
         "local_steps": max(fl.local_steps, 1),
         "batch_size": fl.batch_size,
@@ -90,6 +85,20 @@ def program_signature(fl: FLConfig, arch: str = "") -> Tuple:
         "consensus": (fl.consensus if (fl.n_workers > 1
                                        or fl.byzantine_workers > 0) else ""),
     }
+    if fl.max_cohort > 0:
+        # ragged client plane: the cohort is padded to max_cohort slots and
+        # the draw happens on the host (data/pipeline.SlabStager), so the
+        # population and cohort sizes never reach the trace — sweeping
+        # n_clients/cohort shares one program instead of splitting buckets
+        # (fl.streaming is deliberately absent: the staging backend feeds
+        # the same compiled program, that is the bitwise contract)
+        sig["ragged_slots"] = int(fl.max_cohort)
+    else:
+        sig["n_clients"] = fl.n_clients
+        sig["cohort"] = target
+        # the over-provisioned pool size is a Python int inside cohort_mask
+        sig["cohort_pool"] = int(min(
+            math.ceil(target * fl.straggler_overprovision), fl.n_clients))
     if mode == "sync":
         # async-only knobs don't reach the sync trace; zeroing them merges
         # buckets that would otherwise split spuriously
@@ -120,6 +129,7 @@ class Bucket:
 
     @property
     def size(self) -> int:
+        """Number of trajectories in this bucket."""
         return len(self.lane_ids)
 
 
@@ -134,6 +144,7 @@ class CampaignPlan:
 
     @property
     def size(self) -> int:
+        """Total trajectories across all buckets."""
         return len(self.coords)
 
     def lane_bucket(self, lane: int) -> Tuple[int, int]:

@@ -96,6 +96,7 @@ class ProbeSpec:
 
     @property
     def freeze(self) -> bool:
+        """True when divergence policy holds lanes at their last finite state."""
         return self.enabled and self.on_divergence == "freeze"
 
     @classmethod
@@ -122,6 +123,7 @@ def tree_sq_norm(tree) -> jax.Array:
 
 
 def tree_norm(tree) -> jax.Array:
+    """Global L2 norm over a pytree's leaves."""
     return jnp.sqrt(tree_sq_norm(tree))
 
 

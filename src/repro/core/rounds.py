@@ -536,6 +536,99 @@ def build_multi_round(model, strategy: Strategy, fl: FLConfig, cfg=None,
     return multi_fn
 
 
+def check_ragged_support(fl: FLConfig, strategy: Strategy,
+                         placement: str = "spatial") -> None:
+    """Reject configs the ragged client plane cannot honor.
+
+    Ragged mode trains only the sampled cohort, so anything that keeps
+    per-client state across rounds (SCAFFOLD/MOON variates, error-feedback
+    residuals) or per-client parameters (decentralized topology) would
+    silently skip updates for unsampled clients — refuse loudly instead.
+    """
+    topo = get_topology(fl.topology, fl.gossip_steps)
+    if isinstance(topo, Decentralized):
+        raise ValueError(
+            "ragged cohorts (max_cohort > 0) need client-anonymous state, "
+            "but the decentralized topology keeps per-client parameters — "
+            "use a client_server/hierarchical topology or max_cohort: 0")
+    if _has_client_state(strategy):
+        raise ValueError(
+            f"ragged cohorts (max_cohort > 0) cannot carry per-client "
+            f"strategy state (strategy {fl.strategy!r}"
+            + (", error_feedback" if fl.error_feedback else "")
+            + ") — unsampled clients would never update it; use a "
+            "stateless strategy or max_cohort: 0")
+    if placement != "spatial":
+        raise ValueError(
+            f"ragged cohorts support the spatial placement only, got "
+            f"{placement!r} — the cohort slab is a per-slot client grid")
+
+
+def build_ragged_multi(model, strategy: Strategy, fl: FLConfig,
+                       placement: str = "spatial",
+                       batch_size: Optional[int] = None,
+                       probes: bool = False, on_divergence: str = "report"):
+    """The ragged-cohort rendering of ``build_multi_round``.
+
+    Instead of gathering batches for all ``n_clients`` from a resident
+    root, each round of the scan consumes one *cohort slab row* (see
+    ``data.pipeline.SlabStager``): the sampled cohort's shards padded to
+    K = max_cohort slots with the tail zero-weighted. The population size
+    and cohort draw live entirely on the host, so ``n_clients``/``cohort``
+    drop out of the program signature — any population trains through one
+    compiled program per (K, Lmax, scan length).
+
+    Returns ``multi_fn(ctx, state, slab, root, start_round, n_rounds,
+    hyper)`` with the slab in the resident driver's ``staged`` slot (the
+    executors launch both through the same call shape). Randomness is keyed
+    by (root, absolute round) and, per slot, by the *real* client id the
+    slab carries — so chunking and slab pad width are unobservable, and
+    streaming vs resident staging is bitwise the same program on the same
+    bytes.
+    """
+    from repro.data.pipeline import gather_slab_batches
+
+    check_ragged_support(fl, strategy, placement)
+    single = build_spatial_round(model, strategy, fl, probes=probes)
+    freeze_div = probes and on_divergence == "freeze"
+    batch_size = batch_size or fl.batch_size
+    steps = max(fl.local_steps, 1)
+    k_slots = int(fl.max_cohort)
+
+    def multi_fn(ctx: AxisCtx, state, slab, root, start_round,
+                 n_rounds: int, hyper=None):
+        alive, hyper = pop_alive(hyper)
+
+        def body(st, xs):
+            r, row = xs
+            rkey = determinism.round_key(root, r)
+            batch = gather_slab_batches(row, rkey, batch_size, steps)
+            eff_w = row["w"]
+            new_st, metrics = single(ctx, st, batch, eff_w, rkey, hyper)
+            if probes:
+                # participation counts real (non-pad) slots; masked_frac is
+                # the pad fraction of the slab — the population weight mass
+                # is a host-side quantity in ragged mode
+                pr = metrics.pop("probes")
+                real = (eff_w > 0).astype(jnp.float32)
+                pr["participation"] = real.sum()
+                pr["masked_frac"] = 1.0 - real.sum() / k_slots
+                if freeze_div:
+                    new_st = freeze_unless(1.0 - pr["nonfinite"], new_st, st)
+            if alive is not None:
+                new_st = freeze_unless(alive, new_st, st)
+            if probes:
+                if alive is not None:
+                    pr = probelib.mask_probes(alive, pr)
+                metrics = dict(metrics, probes=probelib.stack_probes(pr))
+            return new_st, metrics
+
+        rounds = start_round + jnp.arange(n_rounds)
+        return jax.lax.scan(body, state, (rounds, slab))
+
+    return multi_fn
+
+
 def init_state(model, strategy: Strategy, fl: FLConfig, key,
                n_clients_local: int = 1, dtype=jnp.float32,
                decentralized: bool = False):

@@ -37,14 +37,17 @@ def _topk_mask(x, ratio):
 
 @dataclasses.dataclass(frozen=True)
 class CompressedFedAvg(Strategy):
+    """FedAvg over a lossy compressor with error feedback (int8/topk)."""
     name: str = "compressed"
 
     def client_state_init(self, params):
+        """Zero error-feedback residual, shaped like the params."""
         if self.fl.error_feedback:
             return {"residual": jax.tree.map(jnp.zeros_like, params)}
         return {}
 
     def postprocess(self, delta, client_state, rng):
+        """Compress delta + residual, round-trip it, keep the new residual."""
         ef = self.fl.error_feedback and "residual" in (client_state or {})
         if ef:
             delta = jax.tree.map(lambda d, r: d + r.astype(d.dtype),
@@ -64,6 +67,7 @@ class CompressedFedAvg(Strategy):
     # -- packed int8 path (kernels/ops.quant_aggregate) -------------------
     @property
     def packs_deltas(self) -> bool:
+        """True when the int8 path emits ``PackedDelta`` for fused aggregation."""
         return self.fl.compression == "int8"
 
     def postprocess_packed(self, delta, client_state, rng):

@@ -11,9 +11,11 @@ from repro.core.strategy import Strategy, global_norm
 
 @dataclasses.dataclass(frozen=True)
 class DPFedAvg(Strategy):
+    """FedAvg with per-client delta clipping and Gaussian noise (DP-FedAvg)."""
     name: str = "dp_fedavg"
 
     def postprocess(self, delta, client_state, rng):
+        """Clip the client delta to ``dp_clip`` and add calibrated noise."""
         clip = self.fl.dp_clip
         sigma = self.fl.dp_noise
         nrm = global_norm(delta)

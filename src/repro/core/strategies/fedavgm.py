@@ -11,12 +11,15 @@ from repro.core.strategy import Strategy, tree_zeros_like
 
 @dataclasses.dataclass(frozen=True)
 class FedAvgM(Strategy):
+    """FedAvg with server-side Nesterov-style momentum."""
     name: str = "fedavgm"
 
     def server_state_init(self, params):
+        """Zero momentum buffer, shaped like the params."""
         return {"momentum": tree_zeros_like(params)}
 
     def server_update(self, params, agg_delta, server_state):
+        """Fold the aggregate delta into the momentum buffer and apply it."""
         beta = self.fl.server_momentum
         m = jax.tree.map(lambda m, d: beta * m + d.astype(m.dtype),
                          server_state["momentum"], agg_delta)
@@ -27,12 +30,14 @@ class FedAvgM(Strategy):
 
 @dataclasses.dataclass(frozen=True)
 class FedAdam(Strategy):
+    """Server-side Adam on the aggregate client delta (FedOpt family)."""
     name: str = "fedadam"
     b1: float = 0.9
     b2: float = 0.99
     eps: float = 1e-3
 
     def server_state_init(self, params):
+        """Zero first/second-moment buffers plus the step counter."""
         return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
                 "t": jnp.zeros((), jnp.int32)}
 
@@ -40,6 +45,7 @@ class FedAdam(Strategy):
         return self.b2 * v + (1 - self.b2) * d * d
 
     def server_update(self, params, agg_delta, server_state):
+        """One Adam step treating the aggregate delta as the gradient."""
         t = server_state["t"] + 1
         m = jax.tree.map(lambda m, d: self.b1 * m + (1 - self.b1) * d,
                          server_state["m"], agg_delta)
@@ -53,6 +59,7 @@ class FedAdam(Strategy):
 
 @dataclasses.dataclass(frozen=True)
 class FedYogi(FedAdam):
+    """FedAdam variant with Yogi's sign-based second-moment update."""
     name: str = "fedyogi"
 
     def _second_moment(self, v, d):

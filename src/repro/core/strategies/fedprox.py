@@ -11,10 +11,12 @@ from repro.core.strategy import Strategy
 
 @dataclasses.dataclass(frozen=True)
 class FedProx(Strategy):
+    """FedAvg with a proximal term pulling local params toward the global."""
     name: str = "fedprox"
 
     def local_loss(self, base_loss, params, global_params, batch,
                    client_state, rng):
+        """Task loss plus ``prox_mu/2 * ||w - w_global||^2``."""
         loss, metrics = base_loss(params, batch, rng)
         mu = self.fl.prox_mu
         prox = sum(jnp.sum(jnp.square((p - g).astype(jnp.float32)))

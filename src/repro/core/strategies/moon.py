@@ -35,13 +35,16 @@ def _cos(a, b):
 
 @dataclasses.dataclass(frozen=True)
 class Moon(Strategy):
+    """Model-contrastive federated learning (MOON) over representation space."""
     name: str = "moon"
 
     def client_state_init(self, params):
+        """Previous-round local params (the contrastive negative)."""
         return {"prev_local": jax.tree.map(jnp.zeros_like, params)}
 
     def local_loss(self, base_loss, params, global_params, batch,
                    client_state, rng):
+        """Task loss plus the model-contrastive term (mu, tau weighted)."""
         loss, metrics = base_loss(params, batch, rng)
         tau, mu = self.fl.moon_tau, self.fl.moon_mu
         sim_glob = _cos(tree_sub(params, global_params),
@@ -52,4 +55,5 @@ class Moon(Strategy):
 
     def client_state_update(self, client_state, server_state, delta,
                             n_local_steps, lr):
+        """Carry this round's trained local params to the next round."""
         return {"prev_local": jax.tree.map(lambda d: d, delta)}

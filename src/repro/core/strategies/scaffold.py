@@ -16,21 +16,26 @@ from repro.core.strategy import Strategy, tree_zeros_like
 
 @dataclasses.dataclass(frozen=True)
 class Scaffold(Strategy):
+    """SCAFFOLD: control variates correcting client drift."""
     name: str = "scaffold"
 
     def server_state_init(self, params):
+        """Zero server control variate, shaped like the params."""
         return {"c": tree_zeros_like(params)}
 
     def client_state_init(self, params):
+        """Zero client control variate, shaped like the params."""
         return {"c_i": tree_zeros_like(params)}
 
     def grad_transform(self, grad, client_state, server_state):
+        """Apply the SCAFFOLD correction ``g - c_i + c`` to local grads."""
         return jax.tree.map(lambda g, ci, c: g - ci + c,
                             grad, client_state["c_i"], server_state["c"])
 
     def client_state_update(self, client_state, server_state, delta,
                             n_local_steps, lr):
         # delta = y_i - x  (client drift); option-II update
+        """Option-II update of the client control variate."""
         c_new = jax.tree.map(
             lambda ci, c, d: ci - c - d / (n_local_steps * lr),
             client_state["c_i"], server_state["c"], delta)
@@ -39,6 +44,7 @@ class Scaffold(Strategy):
     def server_update(self, params, agg_delta, server_state):
         # agg_delta carries (param_delta, c_delta) when rounds are built with
         # carry_c=True; plain tuple split keeps the hook pytree-generic.
+        """Apply the aggregate delta and advance the server control variate."""
         if isinstance(agg_delta, tuple) and len(agg_delta) == 2:
             d_params, d_c = agg_delta
             new_c = jax.tree.map(lambda c, dc: c + dc, server_state["c"], d_c)

@@ -28,24 +28,29 @@ PyTree = Any
 
 
 def tree_zeros_like(t):
+    """Pytree of zeros matching ``tree``'s leaves."""
     return jax.tree.map(jnp.zeros_like, t)
 
 
 def tree_add(a, b, scale=1.0):
+    """Leafwise ``a + b`` over two matching pytrees."""
     return jax.tree.map(lambda x, y: x + scale * y, a, b)
 
 
 def tree_sub(a, b):
+    """Leafwise ``a - b`` over two matching pytrees."""
     return jax.tree.map(lambda x, y: x - y, a, b)
 
 
 def tree_scale(a, s):
+    """Leafwise ``s * a`` over a pytree."""
     return jax.tree.map(lambda x: x * s, a)
 
 
 def global_norm(t):
     # +tiny keeps the sqrt differentiable at exactly-zero trees (MOON's
     # first-round prev-drift; otherwise grad(sqrt)(0) = nan)
+    """Global L2 norm over a pytree's leaves."""
     return jnp.sqrt(1e-24 + sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                                 for x in jax.tree.leaves(t)))
 
@@ -58,9 +63,11 @@ class Strategy:
 
     # -- state ---------------------------------------------------------
     def server_state_init(self, params) -> PyTree:
+        """Initial server-side optimizer state (default: none)."""
         return ()
 
     def client_state_init(self, params) -> PyTree:
+        """Initial per-client carried state (default: none)."""
         return ()
 
     # -- local training hooks -------------------------------------------
@@ -71,10 +78,12 @@ class Strategy:
         return base_loss(params, batch, rng)
 
     def grad_transform(self, grad, client_state, server_state):
+        """Hook transforming local gradients before the SGD step."""
         return grad
 
     def client_state_update(self, client_state, server_state, delta,
                             n_local_steps, lr):
+        """Hook producing the client state carried to the next round."""
         return client_state
 
     # -- delta pipeline ---------------------------------------------------
@@ -108,6 +117,7 @@ class Strategy:
         return tree_add(params, agg_delta, lr), server_state
 
     def describe(self) -> str:
+        """Human-readable one-line description of the strategy config."""
         return f"{self.name}(server_opt={self.fl.server_optimizer})"
 
 

@@ -53,7 +53,13 @@ DATA_AXES = ("seed", "dirichlet_alpha")
 SCHEDULE_AXES = ("staleness_exponent",)
 SCALAR_AXES = tuple(k for k in SWEEPABLE_SCALARS if k != "seed")
 CATEGORICAL_AXES = SWEEPABLE_CATEGORICAL
-KNOWN_AXES = DATA_AXES + SCHEDULE_AXES + SCALAR_AXES + CATEGORICAL_AXES
+# cohort plane: population/cohort sizes are host-side slab-plan values under
+# the ragged client plane (fl.max_cohort > 0), so lanes sweeping them share
+# one compiled program; with max_cohort == 0 they change the trace and
+# bucket through the planner like categorical axes
+COHORT_AXES = ("n_clients", "cohort")
+KNOWN_AXES = (DATA_AXES + SCHEDULE_AXES + SCALAR_AXES + COHORT_AXES
+              + CATEGORICAL_AXES)
 
 # job-YAML convenience: `sweep: {seeds: [0, 1, 2]}`
 _AXIS_ALIASES = {"seeds": "seed"}
@@ -98,10 +104,12 @@ class SweepSpec:
 
     @property
     def names(self) -> Tuple[str, ...]:
+        """Sweep axis names in declaration order."""
         return tuple(n for n, _ in self.axes)
 
     @property
     def size(self) -> int:
+        """Number of grid points (product of axis lengths)."""
         s = 1
         for _, vals in self.axes:
             s *= len(vals)
@@ -149,7 +157,7 @@ def parse_sweep(section) -> Optional[SweepSpec]:
                              f"list of values; got {values!r}")
         if name in CATEGORICAL_AXES:
             values = _categorical_values(name, values)
-        elif name == "seed":
+        elif name == "seed" or name in COHORT_AXES:
             values = tuple(int(v) for v in values)
         else:
             values = tuple(float(v) for v in values)

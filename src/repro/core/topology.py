@@ -31,6 +31,7 @@ def _wmean_local(deltas, weights):
 
 @dataclasses.dataclass(frozen=True)
 class ClientServer:
+    """Star topology: weighted mean of client deltas at the server."""
     name: str = "client_server"
 
     def aggregate(self, ctx: AxisCtx, deltas, weights):
@@ -54,6 +55,7 @@ class Hierarchical:
     name: str = "hierarchical"
 
     def aggregate(self, ctx: AxisCtx, deltas, weights):
+        """Two-tier aggregation: pod-local means, then the cross-pod mean."""
         num = jax.tree.map(
             lambda d: jnp.tensordot(weights, d.astype(jnp.float32), axes=1),
             deltas)
@@ -102,6 +104,7 @@ class Decentralized:
         return state
 
     def aggregate(self, ctx: AxisCtx, deltas, weights):
+        """Gossip-average deltas over the ring for ``gossip_steps``."""
         return self.mix(ctx, deltas)
 
 
@@ -113,6 +116,7 @@ _TOPOLOGIES = ("client_server", "hierarchical", "decentralized")
 
 
 def get_topology(name: str, gossip_steps: int = 1):
+    """Resolve a topology implementation by name."""
     if name == "client_server":
         return ClientServer()
     if name == "hierarchical":

@@ -46,6 +46,7 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
 
 
 def iid_partition(n_items: int, n_clients: int, seed: int = 0):
+    """Shuffle items uniformly into ``n_clients`` equal shards."""
     rng = np.random.RandomState(seed)
     perm = rng.permutation(n_items)
     return [np.sort(p) for p in np.array_split(perm, n_clients)]
@@ -53,6 +54,7 @@ def iid_partition(n_items: int, n_clients: int, seed: int = 0):
 
 def shard_partition(labels: np.ndarray, n_clients: int,
                     shards_per_client: int = 2, seed: int = 0):
+    """Sort-by-label shard partition (pathological non-IID)."""
     rng = np.random.RandomState(seed)
     order = np.argsort(labels, kind="stable")
     shards = np.array_split(order, n_clients * shards_per_client)
@@ -67,6 +69,7 @@ def shard_partition(labels: np.ndarray, n_clients: int,
 
 def partition(kind: str, labels: np.ndarray, n_clients: int,
               alpha: float = 0.5, seed: int = 0):
+    """Dispatch to a partitioner by name (``iid`` | ``dirichlet`` | ``shards``)."""
     if kind == "dirichlet":
         return dirichlet_partition(labels, n_clients, alpha, seed)
     if kind == "iid":

@@ -13,6 +13,7 @@ data order (fault tolerance).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 
 import jax
@@ -191,8 +192,418 @@ def gather_client_batches(staged, round_key, batch_size: int, n_steps: int):
                                           n_steps))(jnp.arange(n_clients))
 
 
+# ---------------------------------------------------------------------------
+# Ragged client plane: cohort slabs + streaming (double-buffered) staging
+# ---------------------------------------------------------------------------
+#
+# With ``max_cohort > 0`` the compiled scan no longer sees the population:
+# each round consumes one *slab row* — the sampled cohort's data padded to K
+# = max_cohort slots, with the tail zero-weighted. The host replays
+# ``faults.cohort_mask`` (already the bitwise host==program contract) ahead
+# of the launch, so it knows exactly which clients' shards each chunk needs.
+# Two stagers assemble slabs for the SAME compiled program:
+#
+#   ResidentSlabStager   — root staged on device once, slab gathered on
+#                          device per chunk (an async dispatch).
+#   StreamingSlabStager  — only the sampled cohorts' shards ever leave host
+#                          memory; chunk k+1's host gather + host->device
+#                          copy run on a background thread overlapped with
+#                          chunk k's scan (double buffering).
+#
+# Because both feed identical slab bytes into one program, streaming ==
+# resident is bitwise by construction, and a population far larger than
+# device memory trains at a working set bounded by (rounds_per_launch, K,
+# Lmax) — the ``staged_bytes`` telemetry counters report it per chunk.
+
+
+def slab_nbytes(slab) -> int:
+    """Total bytes of a slab (or any pytree of arrays)."""
+    return int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(slab)))
+
+
+def gather_slab_batches(slab_row, round_key, batch_size: int, n_steps: int):
+    """Jittable per-round batch gather from one cohort slab row.
+
+    The slab analogue of ``gather_client_batches``: slot ``k`` draws
+    positions in [0, true len) via ``determinism.batch_key(round_key,
+    cid[k])`` — keyed by the *real* client id, not the slot — so a client's
+    byte stream is invariant to which slot it lands in and to the slab pad
+    width Lmax (pad columns are never read). Returns
+    {"x": (K, n_steps, B, ...), "y": ...}.
+    """
+    def one(k):
+        key = determinism.batch_key(round_key, slab_row["cid"][k])
+        maxv = jnp.maximum(slab_row["len"][k], 1)
+        pos = jax.random.randint(key, (n_steps, batch_size), 0, maxv)
+        return {"x": slab_row["x"][k][pos], "y": slab_row["y"][k][pos]}
+    return jax.vmap(one)(jnp.arange(slab_row["len"].shape[0]))
+
+
+def gather_event_batch(row, round_key, client, batch_size: int, n_steps: int):
+    """Jittable batch gather from one async event's slab row.
+
+    Same position draw as ``gather_one_client_batch`` (keyed on the real
+    client id carried by the schedule), reading the event's staged shard
+    instead of the resident root.
+    """
+    key = determinism.batch_key(round_key, client)
+    maxv = jnp.maximum(row["len"], 1)
+    pos = jax.random.randint(key, (n_steps, batch_size), 0, maxv)
+    return {"x": row["x"][pos], "y": row["y"][pos]}
+
+
+class _Prefetcher:
+    """Single-slot double buffer: one background thread assembles the next
+    chunk's slab while the device runs the current one. A request that does
+    not match the pending prefetch (resume, end-of-run remainder) just
+    assembles synchronously."""
+
+    def __init__(self):
+        self.peak_slab_bytes = 0
+        self._pool = None
+        self._pending = None
+
+    def _submit(self, key, fn):
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="slab-stager")
+        self._pending = (key, self._pool.submit(fn))
+
+    def _take(self, key, fn):
+        pend, self._pending = self._pending, None
+        if pend is not None and pend[0] == key:
+            out = pend[1].result()
+        else:
+            if pend is not None:
+                pend[1].cancel()
+            out = fn()
+        self.peak_slab_bytes = max(self.peak_slab_bytes, slab_nbytes(out))
+        return out
+
+
+class SlabStager(_Prefetcher):
+    """Base cohort-slab stager: host-side cohort planning shared by the
+    resident and streaming backends.
+
+    A slab for a chunk of ``n`` rounds starting at absolute round ``start``
+    is a dict of scan inputs with leading round dim n:
+
+      x   (n, K, Lmax, ...)  slot features     y   (n, K, Lmax)  slot labels
+      len (n, K)  true shard sizes             cid (n, K)        real client ids
+      w   (n, K)  FedAvg base weight (len) * cohort mask, 0 on pad slots
+
+    Kept clients fill slots in ascending-id order; pad slots repeat the
+    first kept client's shard (zero-weighted, and harmless to train on).
+    """
+
+    def __init__(self, fl, fault):
+        super().__init__()
+        from repro.runtime import faults as faults_mod
+        self.fl = fl
+        self.fault = fault if fault is not None else faults_mod.FaultModel()
+        self.k_slots = int(fl.max_cohort)
+        self.lmax = 1
+        self.lens = np.zeros((fl.n_clients,), np.int32)
+
+    def plan(self, start: int, n: int):
+        """Replay the cohort draw for rounds [start, start+n) on the host.
+
+        Returns (slots (n, K) int32, real (n, K) float32) — exactly the
+        clients ``faults.cohort_mask`` keeps inside the compiled program,
+        because ``select_cohort`` is the same function.
+        """
+        from repro.runtime import faults as faults_mod
+        fl = self.fl
+        target = int(fl.cohort or fl.n_clients)
+        ids = np.arange(fl.n_clients)
+        slots = np.zeros((n, self.k_slots), np.int32)
+        real = np.zeros((n, self.k_slots), np.float32)
+        for i in range(n):
+            kept = faults_mod.select_cohort(self.fault, start + i, ids,
+                                            target, fl.straggler_overprovision)
+            if len(kept) > self.k_slots:
+                raise ValueError(
+                    f"round {start + i} kept {len(kept)} clients but "
+                    f"max_cohort={self.k_slots} slots are staged")
+            slots[i] = kept[0] if len(kept) else 0
+            slots[i, :len(kept)] = kept
+            real[i, :len(kept)] = 1.0
+        return slots, real
+
+    def widen(self, lmax: int) -> None:
+        """Re-pad shards to a wider Lmax (campaign lanes share one width)."""
+        self.lmax = max(self.lmax, int(lmax))
+
+    def slab(self, start: int, n: int):
+        """The chunk's slab on device (from the prefetch buffer if it hit)."""
+        return self._take(("sync", start, n),
+                          lambda: self._assemble_chunk(start, n))
+
+    def prefetch(self, start: int, n: int) -> None:
+        """Kick background assembly of the next chunk's slab."""
+        if n > 0:
+            self._submit(("sync", start, n),
+                         lambda: self._assemble_chunk(start, n))
+
+    def event_slab(self, clients, tag):
+        """Per-event slab rows {"x": (E, Lmax, ...), "y", "len"} for the
+        async drivers; ``tag`` keys the prefetch buffer (event window)."""
+        clients = np.asarray(clients, np.int32)
+        return self._take(("ev", tag),
+                          lambda: self._assemble_events(clients))
+
+    def prefetch_events(self, clients, tag) -> None:
+        """Kick background assembly of the next event window's rows."""
+        clients = np.asarray(clients, np.int32)
+        if len(clients):
+            self._submit(("ev", tag), lambda: self._assemble_events(clients))
+
+    def _assemble_chunk(self, start, n):
+        slots, real = self.plan(start, n)
+        return self._assemble(slots, real)
+
+
+class ResidentSlabStager(SlabStager):
+    """Slab stager over a device-resident root: ``stage_partitions`` once,
+    then each chunk's slab is an on-device gather (asynchronously
+    dispatched, so no prefetch thread is needed)."""
+
+    def __init__(self, x, y, parts, fl, fault):
+        super().__init__(fl, fault)
+        self._parts = parts
+        self.staged = stage_partitions(x, y, parts)
+        self.lmax = int(self.staged["idx"].shape[1])
+        self.lens = np.asarray(self.staged["len"])
+        self.data = (np.asarray(x), np.asarray(y), parts)
+        self.resident_bytes = slab_nbytes(self.staged)
+        self.device_bytes = self.resident_bytes
+
+    def widen(self, lmax: int) -> None:
+        """Re-pad the resident index plane to a wider Lmax."""
+        if int(lmax) > self.lmax:
+            self.lmax = int(lmax)
+            self.staged["idx"] = jnp.asarray(_pad_idx(self._parts, self.lmax))
+
+    def prefetch(self, start: int, n: int) -> None:
+        """No-op: the device gather in ``slab`` is already async."""
+
+    def prefetch_events(self, clients, tag) -> None:
+        """No-op: the device gather in ``event_slab`` is already async."""
+
+    def _assemble(self, slots, real):
+        sl = jnp.asarray(slots)
+        idx = self.staged["idx"][sl]                     # (n, K, Lmax)
+        lens = self.staged["len"][sl]
+        return {"x": self.staged["x"][idx], "y": self.staged["y"][idx],
+                "len": lens, "cid": sl,
+                "w": lens.astype(jnp.float32) * jnp.asarray(real)}
+
+    def _assemble_events(self, clients):
+        cl = jnp.asarray(clients)
+        idx = self.staged["idx"][cl]                     # (E, Lmax)
+        return {"x": self.staged["x"][idx], "y": self.staged["y"][idx],
+                "len": self.staged["len"][cl]}
+
+
+class StreamingSlabStager(SlabStager):
+    """Slab stager that never stages the population: per-client shards come
+    from a host-side factory and only the sampled cohorts' shards are
+    gathered (numpy) and copied to device, double-buffered by the inherited
+    prefetch thread.
+
+    ``shard_fn(cid) -> (x_c (l, ...), y_c (l,))`` must be deterministic; a
+    ``SyntheticPopulation`` generates shards on demand, and
+    ``from_partitions`` wraps an in-memory root so streaming can be checked
+    bitwise against ``ResidentSlabStager`` on configs that fit.
+    """
+
+    def __init__(self, shard_fn, fl, fault, lens, lmax=None):
+        super().__init__(fl, fault)
+        self._shard = shard_fn
+        self.lens = np.asarray(lens, np.int32)
+        if len(self.lens) != fl.n_clients:
+            raise ValueError(f"{len(self.lens)} shard lengths for "
+                             f"n_clients={fl.n_clients}")
+        self.lmax = int(lmax) if lmax else max(int(self.lens.max()), 1)
+        x0, y0 = shard_fn(0)
+        x0, y0 = np.asarray(x0), np.asarray(y0)
+        self._item_shape, self._x_dtype = x0.shape[1:], x0.dtype
+        self._y_dtype = y0.dtype
+        item = int(np.prod(self._item_shape, dtype=np.int64))
+        # What full residency would cost: the honest denominator for the
+        # bench's staged-bytes ceiling (pad to Lmax like stage_partitions,
+        # plus the int32 index/len planes it would carry).
+        c = int(fl.n_clients)
+        self.resident_bytes = int(
+            c * self.lmax * (item * self._x_dtype.itemsize
+                             + self._y_dtype.itemsize + 4) + c * 4)
+        self.device_bytes = 0
+
+    @classmethod
+    def from_partitions(cls, x, y, parts, fl, fault):
+        """Streaming view of an in-memory root: shard c is x[parts[c]].
+
+        An empty partition reads root item 0 (mirroring ``_pad_idx``'s
+        zero rows) so the assembled slab is byte-identical to the resident
+        stager's device gather.
+        """
+        x, y = np.asarray(x), np.asarray(y)
+
+        def shard(c):
+            p = np.asarray(parts[c], np.int64)
+            return (x[p], y[p]) if len(p) else (x[:1], y[:1])
+
+        lens = np.asarray([len(p) for p in parts], np.int32)
+        st = cls(shard, fl, fault, lens=lens)
+        st.data = (x, y, parts)
+        return st
+
+    def _padded_shard(self, c):
+        xc, yc = self._shard(int(c))
+        xc, yc = np.asarray(xc), np.asarray(yc)
+        length = max(len(yc), 1)
+        reps = -(-self.lmax // length)
+        sel = np.concatenate([np.arange(length, dtype=np.int64)] * reps)
+        sel = sel[:self.lmax]
+        return xc[sel], yc[sel]
+
+    def _assemble(self, slots, real):
+        n, k = slots.shape
+        sx = np.empty((n, k, self.lmax) + self._item_shape, self._x_dtype)
+        sy = np.empty((n, k, self.lmax), self._y_dtype)
+        cache = {}
+        for i in range(n):
+            for j in range(k):
+                c = int(slots[i, j])
+                if c not in cache:
+                    cache[c] = self._padded_shard(c)
+                sx[i, j], sy[i, j] = cache[c]
+        host = {"x": sx, "y": sy, "len": self.lens[slots],
+                "cid": slots, "w": self.lens[slots].astype(np.float32) * real}
+        return {key: jnp.asarray(v) for key, v in host.items()}
+
+    def _assemble_events(self, clients):
+        e = len(clients)
+        sx = np.empty((e, self.lmax) + self._item_shape, self._x_dtype)
+        sy = np.empty((e, self.lmax), self._y_dtype)
+        cache = {}
+        for i, c in enumerate(np.asarray(clients)):
+            c = int(c)
+            if c not in cache:
+                cache[c] = self._padded_shard(c)
+            sx[i], sy[i] = cache[c]
+        return {"x": jnp.asarray(sx), "y": jnp.asarray(sy),
+                "len": jnp.asarray(self.lens[clients])}
+
+
+class StackedSlabStager(_Prefetcher):
+    """Campaign-plane stager: one slab stager per lane, stacked to a leading
+    (S,) sweep dim so the vmapped ragged scan consumes it with in_axes=0.
+
+    Lanes are widened to a common Lmax up front; the wider pad is
+    unobservable (gather positions stay in [0, len)), so lane ``s`` of the
+    stacked slab trains bitwise like the lane's own single run.
+    """
+
+    def __init__(self, lanes):
+        super().__init__()
+        self.lanes = list(lanes)
+        self.lmax = max(l.lmax for l in self.lanes)
+        for lane in self.lanes:
+            lane.widen(self.lmax)
+        self.streaming = any(isinstance(l, StreamingSlabStager)
+                             for l in self.lanes)
+        self.resident_bytes = sum(l.resident_bytes for l in self.lanes)
+        self.device_bytes = sum(l.device_bytes for l in self.lanes)
+
+    def slab(self, start: int, n: int):
+        """The chunk's stacked (S, n, K, ...) slab on device."""
+        return self._take(("sync", start, n),
+                          lambda: self._assemble_chunk(start, n))
+
+    def prefetch(self, start: int, n: int) -> None:
+        """Background-assemble the next chunk across all streaming lanes."""
+        if n > 0 and self.streaming:
+            self._submit(("sync", start, n),
+                         lambda: self._assemble_chunk(start, n))
+
+    def _assemble_chunk(self, start, n):
+        if self.streaming:
+            rows = []
+            for lane in self.lanes:
+                slots, real = lane.plan(start, n)
+                rows.append({k: np.asarray(v)
+                             for k, v in lane._assemble(slots, real).items()})
+            host = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
+            return {k: jnp.asarray(v) for k, v in host.items()}
+        return jax.tree.map(lambda *ls: jnp.stack(ls),
+                            *[lane._assemble_chunk(start, n)
+                              for lane in self.lanes])
+
+
+def make_slab_stager(dataset, fl, fault):
+    """Build the right slab stager for a ragged-mode job.
+
+    Datasets exposing the population protocol (a ``shard(cid)`` factory,
+    e.g. ``SyntheticPopulation``) are never materialized and require
+    ``streaming: true``; in-memory roots stage resident by default and
+    stream when asked.
+    """
+    if hasattr(dataset, "shard"):
+        if not fl.streaming:
+            raise ValueError(
+                f"{type(dataset).__name__} generates shards on demand and "
+                "cannot be staged resident — set streaming: true")
+        if int(dataset.n_clients) != int(fl.n_clients):
+            raise ValueError(f"dataset population ({dataset.n_clients}) != "
+                             f"fl.n_clients ({fl.n_clients})")
+        lens = np.full(fl.n_clients, int(dataset.items_per_client), np.int32)
+        return StreamingSlabStager(dataset.shard, fl, fault, lens=lens)
+    x, y, parts = dataset.distribute_into_chunks(
+        fl.partition, fl.n_clients, fl.dirichlet_alpha)
+    if fl.streaming:
+        return StreamingSlabStager.from_partitions(x, y, parts, fl, fault)
+    return ResidentSlabStager(x, y, parts, fl, fault)
+
+
+@dataclasses.dataclass
+class SyntheticPopulation:
+    """A large client population materialized one shard at a time.
+
+    The streaming-plane exemplar: ``shard(cid)`` deterministically generates
+    client ``cid``'s few items from (seed, cid) with the same planted
+    class-prototype signal as ``SyntheticVision``, so a 10^5-client
+    population costs zero host memory until a cohort is actually sampled.
+    """
+
+    n_clients: int = 100_000
+    items_per_client: int = 8
+    shape: tuple = (8, 8, 1)
+    n_classes: int = 10
+    seed: int = 0
+    noise: float = 0.8
+
+    def __post_init__(self):
+        """Lazily-built prototype cache (shared across shards)."""
+        self._protos = None
+
+    def shard(self, cid: int):
+        """Client ``cid``'s shard as (x (l, ...), y (l,)) numpy arrays."""
+        if self._protos is None:
+            rng0 = np.random.RandomState(self.seed)
+            self._protos = rng0.randn(
+                self.n_classes, *self.shape).astype(np.float32)
+        rng = np.random.RandomState(
+            (1_000_003 * (self.seed + 1) + int(cid)) % (2 ** 31 - 1))
+        y = rng.randint(0, self.n_classes, self.items_per_client)
+        x = self._protos[y] + self.noise * rng.randn(
+            self.items_per_client, *self.shape).astype(np.float32)
+        return x.astype(np.float32), y
+
+
 @dataclasses.dataclass
 class SyntheticVision:
+    """Deterministic synthetic image classification dataset family."""
     n_items: int = 2048
     shape: tuple = (32, 32, 3)
     n_classes: int = 10
@@ -200,6 +611,7 @@ class SyntheticVision:
     noise: float = 0.8
 
     def prepare_root_dataset(self):
+        """Generate the root ``(x, y)`` arrays for the configured size."""
         rng = np.random.RandomState(self.seed)
         y = rng.randint(0, self.n_classes, self.n_items)
         protos = rng.randn(self.n_classes, *self.shape).astype(np.float32)
@@ -209,6 +621,7 @@ class SyntheticVision:
 
     def distribute_into_chunks(self, kind: str, n_clients: int,
                                alpha: float = 0.5):
+        """Partition the root set; returns ``(x, y, per-client index lists)``."""
         x, y = self.prepare_root_dataset()
         parts = part_mod.partition(kind, y, n_clients, alpha, self.seed)
         return x, y, parts
@@ -229,6 +642,7 @@ class SyntheticVision:
 
 @dataclasses.dataclass
 class SyntheticLM:
+    """Deterministic synthetic next-token LM dataset family."""
     vocab: int = 512
     seed: int = 0
 
@@ -247,6 +661,7 @@ class SyntheticLM:
 
     def client_batches(self, client_id: int, n_steps: int, batch: int,
                        seq: int, round_idx: int = 0):
+        """Return ``n_steps`` stacked token batches for one client-round."""
         out = [self.tokens(batch, seq, salt=client_id * 100003 + round_idx * 7 + s)
                for s in range(n_steps)]
         return {k: np.stack([o[k] for o in out]) for k in out[0]}

@@ -71,11 +71,12 @@ import numpy as np
 
 from repro.core import sweeps
 from repro.core.blockchain import param_digest
-from repro.core.jobs import make_dataset, make_fault
+from repro.core.jobs import make_dataset, make_fault, validate_cohort
 from repro.core.plan import program_signature
 from repro.core.probes import PROBE_NAMES
 from repro.core.rounds import init_state
-from repro.data.pipeline import DEDUP_STAGED_AXES, stage_partitions_dedup
+from repro.data.pipeline import (DEDUP_STAGED_AXES, StackedSlabStager,
+                                 make_slab_stager, stage_partitions_dedup)
 from repro.launch.mesh import lane_mesh, shard_lanes
 from repro.runtime.executor import Executor
 from repro.telemetry import comms as comms_mod
@@ -232,6 +233,25 @@ class CampaignExecutor(Executor):
         self.S_pad = -(-self.S // d) * d
         self._fls_pad = list(self.fls) + \
             [self.fls[-1]] * (self.S_pad - self.S)
+        if self.job.fl.max_cohort > 0:
+            # ragged client plane: cohort/population sizes are host-side
+            # slab-plan values, so validate every lane's draw up front (a
+            # lane sweeping cohort past n_clients must fail at build, not
+            # silently clamp mid-campaign)
+            for fl_s in self._fls_pad:
+                validate_cohort(fl_s)
+            if self.job.fl.mode == "async":
+                raise NotImplementedError(
+                    "ragged campaigns (max_cohort > 0) support sync mode "
+                    "only: the async event schedule sizes by n_clients, "
+                    "which the ragged plane makes a per-lane host value. "
+                    "Run async ragged lanes as single Executors")
+            if self.lane_devices:
+                raise NotImplementedError(
+                    "ragged campaigns (max_cohort > 0) do not shard over a "
+                    "lane mesh yet: the stacked slab is restaged per chunk "
+                    "on the host, which would break the zero-collective "
+                    "lane-sharding contract. Use lane_devices=0")
         self.alive = np.ones(self.S_pad, np.float32)  # scheduler + pad mask
         self.alive[self.S:] = 0.0                     # pad lanes never run
         self._thread_alive = self.lane_scheduling or self.S_pad > self.S
@@ -273,6 +293,9 @@ class CampaignExecutor(Executor):
         per-lane planes shard over ``lanes`` and the concatenated roots
         replicate (``stage_partitions_dedup(mesh=...)``)."""
         cfg = getattr(self.job.model, "cfg", None)
+        if self.job.fl.max_cohort > 0:
+            self._stage_ragged(cfg)
+            return
         cache, trajs, keys = {}, [], []
         for fl_s in self._fls_pad:
             k = (fl_s.seed, fl_s.partition, fl_s.dirichlet_alpha)
@@ -286,6 +309,33 @@ class CampaignExecutor(Executor):
         self.data = trajs
         self.staged, self.lane_ds = stage_partitions_dedup(
             trajs, keys, mesh=self.mesh)
+        self.roots = shard_lanes(sweeps.root_keys(self._fls_pad), self.mesh)
+        self.hyper = shard_lanes(sweeps.scalar_plane(self._fls_pad),
+                                 self.mesh)
+
+    def _stage_ragged(self, cfg):
+        """Ragged client plane: one ``SlabStager`` per lane (deduped on the
+        full plan key — a stager's host cohort draw depends on the cohort
+        sizes and the fault seed, not just the dataset triple), stacked by
+        ``StackedSlabStager`` into per-chunk ``(S_pad, n, K, ...)`` slabs.
+        ``self.staged`` stays ``None``: there is no resident root — each
+        chunk's slab is assembled (and for streaming lanes, staged) on
+        demand, exactly like the single-run ragged Executor."""
+        cache, lanes = {}, []
+        for fl_s in self._fls_pad:
+            k = (fl_s.seed, fl_s.partition, fl_s.dirichlet_alpha,
+                 fl_s.n_clients, fl_s.cohort, fl_s.max_cohort,
+                 fl_s.straggler_overprovision, fl_s.streaming)
+            if k not in cache:
+                ds = make_dataset(self.job.raw, fl_s, cfg)
+                cache[k] = make_slab_stager(ds, fl_s,
+                                            make_fault(self.job.raw, fl_s))
+            lanes.append(cache[k])
+        self.stager = StackedSlabStager(lanes)
+        self.trajectories = [getattr(ln, "data", None) for ln in lanes]
+        self.data = self.trajectories
+        self.staged = None
+        self.lane_ds = None
         self.roots = shard_lanes(sweeps.root_keys(self._fls_pad), self.mesh)
         self.hyper = shard_lanes(sweeps.scalar_plane(self._fls_pad),
                                  self.mesh)
@@ -434,11 +484,16 @@ class CampaignExecutor(Executor):
     # cross-device collectives.
     def _round_program(self, n_rounds: int):
         if n_rounds not in self._programs:
+            # ragged lanes carry a per-lane slab (stacked leading S_pad dim
+            # on every leaf); dedup lanes share the concatenated roots and
+            # map only the idx/len planes
+            staged_axes = 0 if self.ragged else DEDUP_STAGED_AXES
+
             def launch(s, staged, roots, hyper, start, n=n_rounds):
                 return jax.vmap(
                     lambda st, sg, rt, hp:
                     self._multi(self.ctx, st, sg, rt, start, n, hp),
-                    in_axes=(0, DEDUP_STAGED_AXES, 0, 0))(
+                    in_axes=(0, staged_axes, 0, 0))(
                     s, staged, roots, hyper)
             self._programs[n_rounds] = jax.jit(launch)
         return self._programs[n_rounds]
@@ -483,7 +538,13 @@ class CampaignExecutor(Executor):
             return self._skip_dead_bucket(n)
         t0 = time.time()
         prog = self._round_program(n)
-        args = (self.state, self.staged, self.roots, self._launch_hyper(),
+        if self.ragged:
+            staged = self.stager.slab(start, n)
+            self._record_slab_bytes(staged)
+            self._prefetch_next(start, n)
+        else:
+            staged = self.staged
+        args = (self.state, staged, self.roots, self._launch_hyper(),
                 start)
         if self.recorder.enabled and self._cost_enabled:
             self._last_program = (n, prog, args)

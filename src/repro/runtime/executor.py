@@ -45,8 +45,8 @@ from repro.core.kvstore import KVStore
 from repro.core.plan import resolve_placement
 from repro.core.probes import (ASYNC_REDUCE, PROBE_NAMES, ProbeSpec,
                                ProbeTable, buffer_occupancy, staleness_hist)
-from repro.core.rounds import build_multi_round, init_state
-from repro.data.pipeline import stage_partitions
+from repro.core.rounds import build_multi_round, build_ragged_multi, init_state
+from repro.data.pipeline import make_slab_stager, slab_nbytes, stage_partitions
 from repro.kernels import ops as kernel_ops
 from repro.metrics.logger import PerformanceLogger, host_usage
 from repro.sharding.axes import AxisCtx
@@ -101,10 +101,17 @@ class Executor:
         self._cost_seen = set()
         self._last_program = None
         fl = self.job.fl
+        from repro.core.jobs import validate_cohort
+        validate_cohort(fl)
         # single source of truth with core/plan.py's program signatures:
         # a drift here would bucket lanes whose compiled programs differ
         self.placement = resolve_placement(fl)
         self.mode = fl.mode
+        # ragged client plane (fl.max_cohort > 0): launches consume per-chunk
+        # cohort slabs from a data/pipeline stager instead of a resident
+        # root — n_clients/cohort never reach the trace
+        self.ragged = fl.max_cohort > 0
+        self.stager = None
         if self.mode == "async":
             from repro.core.async_rounds import build_async_multi
             # async "round" = events_per_round server events: one FedBuff
@@ -114,14 +121,22 @@ class Executor:
             self._multi = build_async_multi(
                 self.job.model, self.job.strategy, fl,
                 probes=self.probes_spec.enabled,
-                on_divergence=self.probes_spec.on_divergence)
+                on_divergence=self.probes_spec.on_divergence,
+                ragged=self.ragged)
         elif self.mode == "sync":
-            self._multi = build_multi_round(
-                self.job.model, self.job.strategy, fl,
-                cfg=getattr(self.job.model, "cfg", None),
-                placement=self.placement, fault=self.job.fault,
-                probes=self.probes_spec.enabled,
-                on_divergence=self.probes_spec.on_divergence)
+            if self.ragged:
+                self._multi = build_ragged_multi(
+                    self.job.model, self.job.strategy, fl,
+                    placement=self.placement,
+                    probes=self.probes_spec.enabled,
+                    on_divergence=self.probes_spec.on_divergence)
+            else:
+                self._multi = build_multi_round(
+                    self.job.model, self.job.strategy, fl,
+                    cfg=getattr(self.job.model, "cfg", None),
+                    placement=self.placement, fault=self.job.fault,
+                    probes=self.probes_spec.enabled,
+                    on_divergence=self.probes_spec.on_divergence)
         else:
             raise ValueError(f"unknown mode {self.mode!r} "
                              "(want 'sync' or 'async')")
@@ -182,9 +197,11 @@ class Executor:
         csm = self.job.fault
         if not isinstance(csm, ClientSystemModel):
             csm = ClientSystemModel(**dataclasses.asdict(csm))
+        lens = (_np.asarray(self.stager.lens, _np.float32) if self.ragged
+                else _np.asarray(self.staged["len"], _np.float32))
         self.schedule = build_schedule(
             csm, fl.n_clients, n_rounds * self.events_per_round,
-            _np.asarray(self.staged["len"], _np.float32),
+            lens,
             buffer_size=fl.async_buffer,
             staleness_exponent=fl.staleness_exponent,
             max_staleness=fl.max_staleness,
@@ -257,16 +274,44 @@ class Executor:
             return int(sum(leaf.size * leaf.dtype.itemsize
                            for leaf in jax.tree.leaves(tree)))
 
-        values = {"data_plane": nbytes(self.staged),
-                  "scalar_plane": nbytes(self.hyper)}
+        if self.ragged:
+            # ragged mode stages no population up front: device_bytes is the
+            # resident stager's root (0 when streaming); the per-chunk slab
+            # working set lands as its own counter at every launch
+            values = {"data_plane": int(self.stager.device_bytes),
+                      "scalar_plane": nbytes(self.hyper)}
+        else:
+            values = {"data_plane": nbytes(self.staged),
+                      "scalar_plane": nbytes(self.hyper)}
         if getattr(self, "sched_dev", None) is not None:
             values["schedule_plane"] = nbytes(self.sched_dev)
         rec.counter("staged_bytes", track=self.telemetry_track, **values)
 
+    def _record_slab_bytes(self, slab):
+        """Per-chunk ``staged_bytes`` counter for ragged launches: the
+        slab working set this launch actually staged, the stager's running
+        peak, and what full residency would have cost — the streaming
+        plane's bounded-memory claim, measurable from telemetry.jsonl."""
+        rec = self.recorder
+        if not rec.enabled:
+            return
+        rec.counter("staged_bytes", track=self.telemetry_track,
+                    slab=slab_nbytes(slab),
+                    peak_slab=int(self.stager.peak_slab_bytes),
+                    resident_equiv=int(self.stager.resident_bytes))
+
     def _stage_data(self):
         """"DownloadDataset": the one-time device staging of the full client
-        partition — the round loop never touches host data after this."""
+        partition — the round loop never touches host data after this.
+        Ragged mode builds a slab stager instead: staging happens per chunk
+        (resident gather or streaming host->device copies)."""
         fl = self.job.fl
+        if self.ragged:
+            self.stager = make_slab_stager(self.job.dataset, fl,
+                                           self.job.fault)
+            self.staged = None
+            self.data = getattr(self.stager, "data", None)
+            return
         x, y, parts = self.job.dataset.distribute_into_chunks(
             fl.partition, fl.n_clients, fl.dirichlet_alpha)
         self.data = (x, y, parts)   # host view, kept for eval_fn consumers
@@ -294,7 +339,9 @@ class Executor:
 
     # -- Alg. 1 lines 16-57: chunked round loop ---------------------------
     def run(self, rounds: Optional[int] = None):
+        """Run (or continue) the chunked round loop up to ``rounds``."""
         rounds = rounds or self.job.fl.rounds
+        self._run_total = rounds      # sizes the ragged stager's prefetch
         if self.mode == "async":
             self._check_async_horizon(rounds)
             return self._chunk_loop(rounds, self._launch_async)
@@ -534,10 +581,25 @@ class Executor:
     def _record_lane_telemetry(self):
         """Post-launch counters hook (campaigns: per-shard lane alive)."""
 
+    def _prefetch_next(self, start: int, n: int) -> None:
+        """Kick the stager's double buffer for the next chunk, so its host
+        gather + host->device copy overlap this launch's device time."""
+        chunk = max(self.job.fl.rounds_per_launch, 1)
+        total = getattr(self, "_run_total", self.job.fl.rounds)
+        nxt = min(chunk, total - (start + n))
+        if nxt > 0:
+            self.stager.prefetch(start + n, nxt)
+
     def _launch_sync(self, start: int, n: int):
         t0 = time.time()
         prog = self._round_program(n)
-        args = (self.state, self.staged, self.root, self.hyper, start)
+        if self.ragged:
+            staged = self.stager.slab(start, n)
+            self._record_slab_bytes(staged)
+            self._prefetch_next(start, n)
+        else:
+            staged = self.staged
+        args = (self.state, staged, self.root, self.hyper, start)
         if self.recorder.enabled and self._cost_enabled:
             self._last_program = (n, prog, args)
         state, metrics = prog(*args)
@@ -558,8 +620,22 @@ class Executor:
         n_ev = n * epr
         t0 = time.time()
         prog = self._event_program(n_ev)
-        args = (self.state, self.staged, self.sched_dev, self.root,
-                self.hyper, start * epr)
+        e0 = start * epr
+        if self.ragged:
+            staged = self.stager.event_slab(
+                self.schedule.client[e0:e0 + n_ev], tag=(e0, n_ev))
+            self._record_slab_bytes(staged)
+            chunk_ev = max(self.job.fl.rounds_per_launch, 1) * epr
+            total_ev = getattr(self, "_run_total", self.job.fl.rounds) * epr
+            nxt = min(chunk_ev, total_ev - (e0 + n_ev))
+            if nxt > 0:
+                self.stager.prefetch_events(
+                    self.schedule.client[e0 + n_ev:e0 + n_ev + nxt],
+                    tag=(e0 + n_ev, nxt))
+        else:
+            staged = self.staged
+        args = (self.state, staged, self.sched_dev, self.root,
+                self.hyper, e0)
         if self.recorder.enabled and self._cost_enabled:
             self._last_program = (("async", n_ev), prog, args)
         state, metrics = prog(*args)
